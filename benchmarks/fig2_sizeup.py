@@ -1,0 +1,36 @@
+"""Fig 2 — size-up: fixed 'cluster', growing dataset size.
+
+Paper claim: runtime grows ~linearly in data size while it fits in memory.
+Measured with the fused single-pass engine on a size ladder; the linearity
+coefficient (R² of a linear fit) is reported.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import QualityEvaluator
+from repro.rdf import synth_encoded
+
+from .common import save_json, timeit
+
+SIZES = [64_000, 128_000, 256_000, 512_000, 1_024_000, 2_048_000]
+
+
+def run(quick: bool = False) -> dict:
+    sizes = SIZES[:4] if quick else SIZES
+    ev = QualityEvaluator(fused=True, backend="jnp")
+    rows = []
+    for n in sizes:
+        tt = synth_encoded(n, seed=11)
+        _, t, sd = timeit(lambda: ev.assess(tt), repeats=3)
+        rows.append(dict(n_triples=n, runtime_s=t, std_s=sd,
+                         ns_per_triple=1e9 * t / n))
+    x = np.array([r["n_triples"] for r in rows], float)
+    y = np.array([r["runtime_s"] for r in rows], float)
+    coef = np.polyfit(x, y, 1)
+    resid = y - np.polyval(coef, x)
+    r2 = 1 - resid.var() / y.var()
+    payload = {"rows": rows, "linear_fit_r2": float(r2),
+               "slope_ns_per_triple": float(coef[0] * 1e9)}
+    save_json("fig2_sizeup.json", payload)
+    return payload

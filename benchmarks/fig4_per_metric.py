@@ -1,0 +1,42 @@
+"""Fig 4 — per-metric runtime (paper runs each metric on BSBM 20GB/200GB).
+
+Paper-faithful mode: one pass per metric (Algorithm 1). Also reports the
+fused single-pass total — the §Perf headline for the QA engine: evaluating
+all K metrics costs ~1 pass instead of K.
+"""
+from __future__ import annotations
+
+from repro.core import ALL_METRICS, PAPER_METRICS, QualityEvaluator
+from repro.rdf import synth_encoded
+
+from .common import save_json, timeit
+
+SIZES = [256_000, 1_024_000]
+
+
+def run(quick: bool = False) -> dict:
+    sizes = SIZES[:1] if quick else SIZES
+    out = {}
+    for n in sizes:
+        tt = synth_encoded(n, seed=9)
+        per_metric = {}
+        for m in PAPER_METRICS:
+            ev = QualityEvaluator([m], fused=False, backend="jnp")
+            _, t, _ = timeit(lambda: ev.assess(tt), repeats=3)
+            per_metric[m] = t
+        ev_all = QualityEvaluator(PAPER_METRICS, fused=False, backend="jnp")
+        _, t_seq, _ = timeit(lambda: ev_all.assess(tt), repeats=3)
+        ev_fused = QualityEvaluator(PAPER_METRICS, fused=True, backend="jnp")
+        _, t_fused, _ = timeit(lambda: ev_fused.assess(tt), repeats=3)
+        ev_fused_all = QualityEvaluator(ALL_METRICS, fused=True,
+                                        backend="jnp")
+        _, t_fused_all, _ = timeit(lambda: ev_fused_all.assess(tt),
+                                   repeats=3)
+        out[str(n)] = dict(
+            per_metric_s=per_metric,
+            paper_mode_7_passes_s=t_seq,
+            fused_1_pass_s=t_fused,
+            fused_all_16_metrics_s=t_fused_all,
+            fusion_speedup=t_seq / t_fused)
+    save_json("fig4_per_metric.json", out)
+    return out

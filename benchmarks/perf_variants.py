@@ -1,0 +1,141 @@
+"""§Perf variant measurements — compile named before/after variants and
+record their roofline inputs (runs inside its own 512-device process, like
+the dry-run cells).
+
+  PYTHONPATH=src python -m benchmarks.perf_variants <variant> | tail -1
+
+Variants:
+  deepseek_decode_noseqtp   MLA decode_32k with the latent cache NOT
+                            sequence-TP-sharded (baseline for iteration 3)
+  qa_per_metric             paper-faithful per-metric QA scan: sums the
+                            7 compiled programs' per-device bytes accessed
+                            (vs the fused single pass in the dry-run)
+  qwen_train_remat_dots     qwen train_4k with 'dots' remat policy instead
+                            of full remat (compute-vs-memory trade probe)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+import time
+
+
+def _measure(fn, in_shardings, args, donate=()):
+    import jax
+    from repro.launch.dryrun import collective_bytes
+    t0 = time.time()
+    compiled = jax.jit(fn, in_shardings=in_shardings,
+                       donate_argnums=donate).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    return {
+        "compile_s": round(time.time() - t0, 1),
+        "memory_total_per_device": int(mem.argument_size_in_bytes
+                                       + mem.output_size_in_bytes
+                                       + mem.temp_size_in_bytes
+                                       - mem.alias_size_in_bytes),
+        "flops_per_device": float(cost.get("flops", -1)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1)),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+
+
+def deepseek_decode_noseqtp():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import deepseek_v2_236b as DS
+    from repro.configs.lm_common import _policy, _shardings, _batch_sharding
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as tf
+
+    cfg = DS.FULL
+    mesh = make_production_mesh()
+    policy = _policy(mesh, cfg)
+    params, logical = tf.init_abstract(cfg)
+    pshard = _shardings(mesh, policy, logical, params)
+    B, S = 128, 32768
+    cache, cache_logical = tf.init_cache(cfg, B, S, abstract=True,
+                                         seq_tp=False)   # <-- the variant
+    cshard = _shardings(mesh, policy, cache_logical, cache)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    repl = NamedSharding(mesh, P())
+
+    def fn(p, c, t, cp):
+        return tf.decode_step(cfg, p, c, t, cp, mesh=mesh, policy=policy)
+    return _measure(fn, (pshard, cshard, _batch_sharding(mesh, policy),
+                         repl), (params, cache, tokens, pos), donate=(1,))
+
+
+def qa_per_metric():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import PAPER_METRICS, QualityEvaluator
+    from repro.launch.mesh import make_production_mesh
+    from repro.rdf.triple_tensor import N_PLANES
+    from repro.configs.base import pad_to
+
+    mesh = make_production_mesh()
+    n = pad_to(817_774_057, 256)          # BSBM-200GB-scale triple count
+    rows = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    planes = jax.ShapeDtypeStruct((n, N_PLANES), jnp.int32)
+    total = {"bytes_accessed_per_device": 0.0, "flops_per_device": 0.0,
+             "passes": 0, "compile_s": 0.0}
+    ev = QualityEvaluator(PAPER_METRICS, fused=False, backend="jnp",
+                          mesh=mesh)
+    for pln in ev.plans:                   # one compiled program per metric
+        fn = ev._pass_fn(pln)
+        m = _measure(fn, (rows,), (planes,))
+        total["bytes_accessed_per_device"] += m["bytes_accessed_per_device"]
+        total["flops_per_device"] += m["flops_per_device"]
+        total["compile_s"] += m["compile_s"]
+        total["passes"] += 1
+    return total
+
+
+def qa_fused_paper7():
+    """Fused single pass over ONLY the 7 paper metrics (apples-to-apples
+    with qa_per_metric)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import PAPER_METRICS, QualityEvaluator
+    from repro.launch.mesh import make_production_mesh
+    from repro.rdf.triple_tensor import N_PLANES
+    from repro.configs.base import pad_to
+
+    mesh = make_production_mesh()
+    n = pad_to(817_774_057, 256)
+    rows = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    planes = jax.ShapeDtypeStruct((n, N_PLANES), jnp.int32)
+    ev = QualityEvaluator(PAPER_METRICS, fused=True, backend="jnp",
+                          mesh=mesh)
+    return _measure(ev._pass_fn(ev.plans[0]), (rows,), (planes,))
+
+
+def qwen_train_remat_dots():
+    import dataclasses
+    from repro.configs import qwen2_5_14b as Q
+    from repro.configs.lm_common import lm_bundle
+    from repro.launch.mesh import make_production_mesh
+    cfg = dataclasses.replace(Q.FULL, remat="dots")
+    mesh = make_production_mesh()
+    b = lm_bundle(cfg, "train_4k", mesh)
+    return _measure(b.fn, b.in_shardings, b.args, donate=b.donate)
+
+
+def main():
+    name = sys.argv[1]
+    out = {"variant": name}
+    out.update(globals()[name]())
+    os.makedirs("results", exist_ok=True)
+    with open(f"results/perf_variant_{name}.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits results/*.json and a console summary. The roofline section reads the
+dry-run artifacts if present (results/dryrun.jsonl).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _section(title):
+    print("\n" + "=" * 72)
+    print(title)
+    print("=" * 72, flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table4,fig2,fig3,fig4,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    t_start = time.time()
+
+    if only is None or "table4" in only:
+        _section("Table 4 — runtime vs centralized (Luzzu-like) baseline")
+        from . import table4_performance
+        p = table4_performance.run(quick=args.quick)
+        for row in p["table"]:
+            n = row["n_triples"]
+            if row.get("luzzu_joint_s") is not None:
+                print(f"  {n:>9,} triples: luzzu(single)={row['luzzu_single_s']:7.2f}s "
+                      f"luzzu(joint)={row['luzzu_joint_s']:7.2f}s "
+                      f"dist(local)={row['dist_local_s']:6.3f}s "
+                      f"speedup={row['speedup_vs_joint']:6.1f}x "
+                      f"agree={row['correctness_agree']}")
+            else:
+                extra = (f" cluster8={row['dist_cluster8_s']:6.3f}s"
+                         if "dist_cluster8_s" in row else "")
+                print(f"  {n:>9,} triples: luzzu=(projected "
+                      f"{row['luzzu_projected_joint_s']:8.1f}s) "
+                      f"dist(local)={row['dist_local_s']:6.3f}s{extra} "
+                      f"proj.speedup={row['projected_speedup']:7.1f}x")
+
+    if only is None or "fig2" in only:
+        _section("Fig 2 — size-up (fixed engine, growing data)")
+        from . import fig2_sizeup
+        p = fig2_sizeup.run(quick=args.quick)
+        for r in p["rows"]:
+            print(f"  {r['n_triples']:>9,} triples: {r['runtime_s']:7.3f}s "
+                  f"({r['ns_per_triple']:6.1f} ns/triple)")
+        print(f"  linear-fit R² = {p['linear_fit_r2']:.4f}")
+
+    if only is None or "fig3" in only:
+        _section("Fig 3 + Fig 5 — node scalability (speedup & efficiency)")
+        from . import fig3_node_scalability
+        p = fig3_node_scalability.run(quick=args.quick)
+        for r in p["rows"]:
+            print(f"  workers={r['workers']}: wall={r['wall_s']:7.3f}s "
+                  f"S={r['speedup']:5.2f} E={r['efficiency']:5.2f}")
+        print(f"  ({p['method']})")
+
+    if only is None or "fig4" in only:
+        _section("Fig 4 — per-metric runtime + fused-pass §Perf headline")
+        from . import fig4_per_metric
+        p = fig4_per_metric.run(quick=args.quick)
+        for n, d in p.items():
+            print(f"  {int(n):,} triples:")
+            for m, t in d["per_metric_s"].items():
+                print(f"    {m:4s}: {t:6.3f}s")
+            print(f"    paper mode (7 passes): {d['paper_mode_7_passes_s']:6.3f}s")
+            print(f"    fused (1 pass):        {d['fused_1_pass_s']:6.3f}s "
+                  f"-> {d['fusion_speedup']:4.1f}x")
+            print(f"    fused, all 16 metrics: {d['fused_all_16_metrics_s']:6.3f}s")
+
+    if only is None or "roofline" in only:
+        _section("Roofline — per (arch × shape) from the dry-run")
+        from . import roofline
+        p = roofline.run(quick=args.quick)
+        ok = [r for r in p["rows"] if "skip" not in r]
+        skips = [r for r in p["rows"] if "skip" in r]
+        if not p["rows"]:
+            print("  (no results/dryrun.jsonl yet — run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun)")
+        for r in ok:
+            print(f"  {r['arch']:24s} {r['shape']:14s} dom={r['dominant']:10s} "
+                  f"bound={r['bound_s']:.2e}s mem={r['mem_per_device_gib']:6.2f}GiB "
+                  f"MFU-ceil={r['frac_compute']:.3f} floor={r['roofline_fraction']:.3f}")
+        for r in skips:
+            print(f"  {r['arch']:24s} {r['shape']:14s} SKIP ({r['skip'][:50]}…)")
+
+    print(f"\nTotal benchmark time: {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fault-tolerant assessment: chunked scan, injected failures + stragglers,
+crash, and exact resume from checkpoint.
+
+  PYTHONPATH=src python examples/assess_restart.py
+"""
+import tempfile
+
+from repro.core import ALL_METRICS, QualityEvaluator
+from repro.dist import ChunkScheduler, FaultInjector, WorkerFailure
+from repro.rdf import synth_encoded
+
+dataset = synth_encoded(200_000, seed=7)
+evaluator = QualityEvaluator(ALL_METRICS, fused=True, backend="jnp")
+reference = evaluator.assess(dataset)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    sched = ChunkScheduler(evaluator, n_chunks=24, checkpoint_dir=ckpt_dir,
+                           checkpoint_every=6)
+    # two flaky workers, one straggler, and a coordinator crash at merge 12
+    faults = FaultInjector(fail_chunks={3: 2, 11: 1},
+                           slow_chunks={5: 0.5},
+                           crash_after_merges=12)
+    try:
+        sched.run(dataset, faults=faults)
+    except WorkerFailure as e:
+        print(f"crashed as injected: {e}")
+
+    print("restarting from checkpoint …")
+    sched2 = ChunkScheduler(evaluator, n_chunks=24, checkpoint_dir=ckpt_dir,
+                            checkpoint_every=6)
+    result, stats = sched2.run(dataset)
+    print(f"resumed from merge {stats.resumed_from}; "
+          f"attempts after restart: {stats.attempts}/24")
+
+for k in reference.values:
+    assert abs(result.values[k] - reference.values[k]) < 1e-9, k
+print("fault-tolerant result identical to the single-pass reference ✓")

@@ -1,0 +1,19 @@
+"""Serve a DIN recommender: online p99 scoring + bulk retrieval.
+
+  PYTHONPATH=src python examples/serve_din.py
+"""
+import subprocess
+import sys
+
+env = {"PYTHONPATH": "src"}
+print("== online scoring (batch=64) ==")
+subprocess.run([sys.executable, "-m", "repro.launch.serve", "--model",
+                "din", "--batch", "64", "--requests", "20"], env=env,
+               check=True)
+print("== retrieval (1 user x 100k candidates) ==")
+subprocess.run([sys.executable, "-m", "repro.launch.serve", "--model",
+                "din", "--batch", "1", "--cands", "100000", "--requests",
+                "5"], env=env, check=True)
+print("== LM decode (smoke config) ==")
+subprocess.run([sys.executable, "-m", "repro.launch.serve", "--model",
+                "lm", "--tokens", "32"], env=env, check=True)

@@ -1,0 +1,13 @@
+"""Train a small LM end-to-end with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py          # tiny, ~1 min on CPU
+  PYTHONPATH=src python examples/train_lm.py --scale small --steps 300
+      # ~100M-param config, a few hundred steps (cluster-scale on CPU: slow)
+"""
+import subprocess
+import sys
+
+args = sys.argv[1:] or ["--scale", "smoke", "--steps", "60",
+                        "--ckpt-dir", "/tmp/repro_lm_ckpt"]
+subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+               env={"PYTHONPATH": "src"}, check=True)

@@ -1,0 +1,4 @@
+"""Checkpointing substrate."""
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,23 @@
+"""Architecture configs — importing this package registers all archs.
+
+``--arch <id>`` values: qwen2.5-14b, internlm2-20b, gemma3-12b,
+deepseek-v2-236b, granite-moe-1b-a400m, gatedgcn, dimenet, equiformer-v2,
+graphcast, din (+ the paper's own quality-assessment config in paper_qa).
+"""
+from .base import REGISTRY, ArchSpec, Bundle, Skip, get_arch
+
+from . import qwen2_5_14b      # noqa: F401
+from . import internlm2_20b    # noqa: F401
+from . import gemma3_12b       # noqa: F401
+from . import deepseek_v2_236b  # noqa: F401
+from . import granite_moe_1b   # noqa: F401
+from . import gatedgcn_cfg     # noqa: F401
+from . import dimenet_cfg      # noqa: F401
+from . import equiformer_v2_cfg  # noqa: F401
+from . import graphcast_cfg    # noqa: F401
+from . import din_cfg          # noqa: F401
+from . import paper_qa         # noqa: F401
+
+ALL_ARCHS = tuple(REGISTRY)
+
+__all__ = ["REGISTRY", "ALL_ARCHS", "ArchSpec", "Bundle", "Skip", "get_arch"]

@@ -1,0 +1,50 @@
+"""Arch registry: every assigned architecture is a selectable config
+(``--arch <id>``) exposing smoke tests and dry-run bundles."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+REGISTRY: dict[str, "ArchSpec"] = {}
+
+
+@dataclasses.dataclass
+class Bundle:
+    """Everything the dry-run needs to lower one (arch × shape × mesh) cell."""
+    fn: Callable                    # jit target
+    args: tuple                     # abstract args (ShapeDtypeStruct pytrees)
+    in_shardings: Any               # matching pytree of NamedSharding
+    out_shardings: Any = None       # optional output shardings
+    static_argnums: tuple = ()
+    donate: tuple = ()              # donate_argnums (aliased in/out buffers)
+    description: str = ""
+
+
+@dataclasses.dataclass
+class Skip:
+    reason: str
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str                     # 'lm' | 'gnn' | 'recsys'
+    shape_names: tuple[str, ...]
+    smoke: Callable[[], dict]       # reduced-config CPU smoke step
+    bundle: Callable[..., Any]      # (shape_name, mesh, multi_pod) -> Bundle|Skip
+    notes: str = ""
+    # MODEL_FLOPS inputs for the roofline (6·N·D etc.)
+    flops_info: Callable[[str], dict] | None = None
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_arch(name: str) -> ArchSpec:
+    return REGISTRY[name]
+
+
+def pad_to(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple

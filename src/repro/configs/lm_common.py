@@ -1,0 +1,171 @@
+"""Shared dry-run/smoke plumbing for the five LM architectures.
+
+Shape set (assignment): train_4k (train_step), prefill_32k (prefill),
+decode_32k + long_500k (serve_step: 1 new token against a KV cache).
+long_500k is only built for hybrid/sub-quadratic archs; pure full-attention
+archs return Skip (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import ShardingPolicy
+from ..models import transformer as tf
+from ..optim import AdamW
+from .base import Bundle, Skip
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, seq_shard=True),
+}
+
+
+def _policy(mesh, cfg) -> ShardingPolicy:
+    return ShardingPolicy(mesh_axes=tuple(mesh.axis_names), fsdp=cfg.fsdp)
+
+
+def _shardings(mesh, policy, logical, shapes_tree):
+    return policy.shardings_for_tree(mesh, logical, shapes_tree)
+
+
+def _shardings_logical_only(mesh, policy, logical):
+    return policy.shardings_for_tree(mesh, logical)
+
+
+def _vocab_tp(cfg, mesh):
+    """'model' if the vocab divides the model axis, else replicated."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return "model" if cfg.vocab_size % sizes["model"] == 0 else None
+
+
+def _batch_sharding(mesh, policy, *tail):
+    return NamedSharding(mesh, P(policy.data_axes, *tail))
+
+
+def lm_bundle(cfg: tf.TransformerConfig, shape_name: str, mesh,
+              sub_quadratic: bool = False):
+    info = LM_SHAPES[shape_name]
+    if shape_name == "long_500k" and not sub_quadratic:
+        return Skip("pure full-attention arch — 500k-token dense decode "
+                    "cache is the regime the assignment excludes "
+                    "(DESIGN.md §7)")
+    policy = _policy(mesh, cfg)
+    params, logical = tf.init_abstract(cfg)
+    pshard = _shardings(mesh, policy, logical, params)
+    B, S = info["batch"], info["seq"]
+    repl = NamedSharding(mesh, P())
+
+    if info["kind"] == "train":
+        # microbatches must still cover the data-parallel axes
+        import dataclasses as _dc
+        import numpy as _np
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_data = int(_np.prod([sizes[a] for a in policy.data_axes]))
+        k = max(1, min(cfg.grad_accum, B // n_data))
+        cfg = _dc.replace(cfg, grad_accum=k)
+        opt = AdamW(lr=1e-4, state_dtype=cfg.opt_state_dtype)
+        opt_state = opt.init_abstract(params)
+        opt_shard = {"m": pshard, "v": pshard, "count": repl}
+        state = {"params": params, "opt": opt_state,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_shard = {"params": pshard, "opt": opt_shard, "step": repl}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch_shard = {"tokens": _batch_sharding(mesh, policy)}
+        fn = tf.make_train_step(cfg, opt, mesh=mesh, policy=policy)
+        return Bundle(fn=fn, args=(state, batch),
+                      in_shardings=(state_shard, batch_shard), donate=(0,),
+                      description=f"train_step {B}x{S}")
+
+    if info["kind"] == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        # the emitted cache must land in the decode layout: batch over data,
+        # cache sequence dim TP over 'model' (flash-decoding split-KV)
+        cache_abs, cache_logical = tf.init_cache(cfg, B, S, abstract=True,
+                                                 seq_tp=True)
+        cshard = _shardings(mesh, policy, cache_logical, cache_abs)
+        logits_shard = _batch_sharding(mesh, policy, None,
+                                       _vocab_tp(cfg, mesh))
+        fn = functools.partial(tf.prefill, cfg, s_max=S, mesh=mesh,
+                               policy=policy)
+        return Bundle(fn=lambda p, t: fn(p, t), args=(params, tokens),
+                      in_shardings=(pshard,
+                                    _batch_sharding(mesh, policy)),
+                      out_shardings=(logits_shard, cshard),
+                      description=f"prefill {B}x{S}")
+
+    # decode: one token against an S-token cache. Cache sequence dim is TP
+    # over 'model' (flash-decoding split-KV: partial softmax psum) — the kv
+    # head dim stays unsharded/unpadded-efficient and MLA's latent cache
+    # (no head dim) shards the same way.
+    seq_shard = info.get("seq_shard", False)
+    seq_tp = not seq_shard
+    cache, cache_logical = tf.init_cache(cfg, B, S, abstract=True,
+                                         seq_shard=seq_shard, seq_tp=seq_tp)
+    cshard = _shardings(mesh, policy, cache_logical, cache)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_shard = (_batch_sharding(mesh, policy) if B > 1 else repl)
+    vtp = _vocab_tp(cfg, mesh)
+    logits_shard = (_batch_sharding(mesh, policy, None, vtp)
+                    if B > 1 else NamedSharding(mesh, P(None, None, vtp)))
+
+    def fn(p, c, t, cp):
+        return tf.decode_step(cfg, p, c, t, cp, mesh=mesh,
+                              policy=_policy(mesh, cfg))
+    return Bundle(fn=fn, args=(params, cache, tokens, pos),
+                  in_shardings=(pshard, cshard, tok_shard, repl),
+                  out_shardings=(logits_shard, cshard),
+                  donate=(1,),  # in-place KV-cache update
+                  description=f"serve_step B={B} cache={S}")
+
+
+def lm_smoke(cfg_small: tf.TransformerConfig, vocab: int = 128):
+    """One CPU train step + one decode step on the reduced config."""
+    params, _ = tf.init_transformer(cfg_small, jax.random.key(0))
+    opt = AdamW(lr=1e-3)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.int32(0)}
+    step = jax.jit(tf.make_train_step(cfg_small, opt))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, vocab)
+    state, metrics = step(state, {"tokens": toks})
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), loss
+    logits, cache = tf.prefill(cfg_small, params, toks, s_max=24,
+                               logits_last_only=False)
+    assert logits.shape == (2, 16, cfg_small.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    ld, _ = tf.decode_step(cfg_small, params, cache,
+                           toks[:, :1], jnp.int32(16))
+    assert ld.shape == (2, 1, cfg_small.vocab_size)
+    assert not bool(jnp.isnan(ld).any())
+    return {"loss": loss}
+
+
+def lm_flops_info(cfg: tf.TransformerConfig, shape_name: str) -> dict:
+    info = LM_SHAPES[shape_name]
+    n = cfg.num_params()
+    n_active = cfg.num_active_params()
+    # XLA cost_analysis counts a scan body ONCE (not × trip count); the
+    # roofline multiplies HLO flops/bytes by this static structure factor.
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        model_flops = 6 * n_active * tokens
+        scan_factor = cfg.n_layers * max(cfg.grad_accum, 1)
+    elif info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        model_flops = 2 * n_active * tokens
+        scan_factor = cfg.n_layers
+    else:  # decode: 1 token/seq + attention over cache
+        tokens = info["batch"]
+        model_flops = 2 * n_active * tokens
+        scan_factor = cfg.n_layers
+    return {"n_params": n, "n_active": n_active, "tokens": tokens,
+            "model_flops": model_flops, "kind": info["kind"],
+            "scan_factor": scan_factor}

@@ -1,0 +1,24 @@
+"""Core QAP engine — the paper's contribution as a composable JAX module.
+
+Quality Assessment Pattern (paper §2.1): Filters/Rules = vectorized predicate
+``Expr`` trees, Transformations = their ∩/∪ algebra, Actions = counts (+HLL
+distinct sketches) reduced over the device mesh, Metrics = counters +
+arithmetic finalize. The planner fuses all metrics into one data pass.
+"""
+from .expr import (AnyBits, Cmp, EqPlanes, Expr, HasBits, And, Or, Not,
+                   compile_program, eval_program_jnp, program_stack_depth)
+from .metrics import (ALL_METRICS, EXTENDED_METRICS, PAPER_METRICS,
+                      SKETCH_METRICS, REGISTRY, Metric, get_metrics,
+                      URI_TOO_LONG)
+from .planner import Plan, plan, plan_single
+from .evaluator import AssessmentResult, QualityEvaluator
+from . import sketches, report
+
+__all__ = [
+    "AnyBits", "Cmp", "EqPlanes", "Expr", "HasBits", "And", "Or", "Not",
+    "compile_program", "eval_program_jnp", "program_stack_depth",
+    "ALL_METRICS", "EXTENDED_METRICS", "PAPER_METRICS", "SKETCH_METRICS",
+    "REGISTRY", "Metric", "get_metrics", "URI_TOO_LONG",
+    "Plan", "plan", "plan_single",
+    "AssessmentResult", "QualityEvaluator", "sketches", "report",
+]

@@ -1,0 +1,59 @@
+"""DQV-style machine-readable quality report (paper §2.3, line 10).
+
+The paper emits W3C Data Quality Vocabulary (DQV) descriptions; we produce the
+same structure as JSON-LD-shaped dicts (and N-Triples text), keyed by the
+metric registry's dimension taxonomy.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+from typing import Mapping
+
+from .evaluator import AssessmentResult
+from .metrics import REGISTRY
+
+DQV = "http://www.w3.org/ns/dqv#"
+SDMX = "http://purl.org/linked-data/sdmx/2009/measure#"
+
+
+def to_dqv(result: AssessmentResult, dataset_uri: str = "urn:repro:dataset",
+           computed_on: str | None = None) -> dict:
+    ts = computed_on or datetime.datetime.now(datetime.timezone.utc).isoformat()
+    measurements = []
+    for name, value in sorted(result.values.items()):
+        m = REGISTRY[name]
+        measurements.append({
+            "@type": DQV + "QualityMeasurement",
+            DQV + "computedOn": {"@id": dataset_uri},
+            DQV + "isMeasurementOf": {"@id": f"urn:repro:metric:{name}"},
+            DQV + "value": value,
+            "inDimension": m.dimension,
+            "description": m.description,
+            "generatedAtTime": ts,
+        })
+    return {
+        "@context": {"dqv": DQV, "sdmx-measure": SDMX},
+        "@id": dataset_uri,
+        "nTriples": result.n_triples,
+        "passes": result.passes,
+        "measurements": measurements,
+    }
+
+
+def to_ntriples(result: AssessmentResult,
+                dataset_uri: str = "urn:repro:dataset") -> str:
+    lines = []
+    for name, value in sorted(result.values.items()):
+        node = f"_:meas_{name}"
+        lines.append(f"{node} <{DQV}computedOn> <{dataset_uri}> .")
+        lines.append(f"{node} <{DQV}isMeasurementOf> "
+                     f"<urn:repro:metric:{name}> .")
+        lines.append(
+            f'{node} <{DQV}value> '
+            f'"{value}"^^<http://www.w3.org/2001/XMLSchema#double> .')
+    return "\n".join(lines) + "\n"
+
+
+def to_json(result: AssessmentResult, **kw) -> str:
+    return json.dumps(to_dqv(result, **kw), indent=2)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``qap_count`` — fused multi-metric predicate+count scan (the paper's metric
+  evaluation loop, one HBM pass for all metrics).
+* ``hll`` — HyperLogLog register update (distinct-count actions).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
+on CPU with interpret=True against pure numpy/jnp oracles in ``*/ref.py``.
+"""

@@ -1,0 +1,2 @@
+"""hll kernel package."""
+from . import kernel, ops, ref

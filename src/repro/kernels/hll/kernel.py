@@ -1,0 +1,86 @@
+"""HyperLogLog register-update Pallas TPU kernel.
+
+Per block of rows: murmur-finalizer hash of the selected plane columns →
+(bucket, rank) → scatter-max into 2^p registers. TPUs have no native
+scatter-max in the VPU, so the kernel uses the dense one-hot formulation:
+
+    regs_block[m] = max_i rank[i] * [bucket[i] == m]
+
+The (BLOCK_N, M) intermediate is the VMEM sizing constraint: with
+BLOCK_N=1024 and p=12 (M=4096) it is 1024×4096×4B = 16 MiB — the block is
+tiled so it stays inside VMEM; rows stream HBM→VMEM once. Registers are an
+(M//128, 128) int32 accumulator block reused across grid steps (init at step
+0, max-merge afterwards) — merging is associative, which is exactly what the
+fault-tolerance layer relies on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fmix32(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _kernel(planes_ref, regs_ref, *, cols, p, valid_plane):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        regs_ref[...] = jnp.zeros_like(regs_ref)
+
+    block = planes_ref[...]            # (BLOCK_N, P) int32
+    n_rows = block.shape[0]
+    m = 1 << p
+
+    h = jnp.full((n_rows, 1), jnp.uint32(0x9E3779B9))
+    for c in cols:
+        h = _fmix32(h ^ block[:, c:c + 1].astype(jnp.uint32))
+        h = h * jnp.uint32(5) + jnp.uint32(0xE6546B64)
+    h = _fmix32(h)
+
+    bucket = (h >> (32 - p)).astype(jnp.int32)        # (BLOCK_N, 1)
+    w = (h << p).astype(jnp.uint32)
+    max_rank = 32 - p + 1
+    rank = jnp.where(w == 0, max_rank, jax.lax.clz(w).astype(jnp.int32) + 1)
+    rank = jnp.minimum(rank, max_rank)
+    if valid_plane is not None:
+        rank = jnp.where(block[:, valid_plane:valid_plane + 1] != 0, rank, 0)
+
+    # Dense one-hot scatter-max: (BLOCK_N, M) — the VMEM working set.
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (n_rows, m), 1)
+    hits = jnp.where(bucket == lanes, rank, 0)        # (BLOCK_N, M)
+    block_regs = jnp.max(hits, axis=0)                # (M,)
+    regs_ref[...] = jnp.maximum(regs_ref[...],
+                                block_regs.reshape(regs_ref.shape))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cols", "p", "valid_plane", "block_n", "interpret"))
+def hll_fold_kernel(planes, *, cols, p, valid_plane=None, block_n=1024,
+                    interpret=True):
+    """planes: (N, P) int32, N % block_n == 0 → (2^p,) int32 registers."""
+    n, width = planes.shape
+    assert n % block_n == 0, (n, block_n)
+    m = 1 << p
+    rows = max(m // 128, 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, cols=cols, p=p, valid_plane=valid_plane),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, min(m, 128)), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, min(m, 128)), jnp.int32),
+        interpret=interpret,
+    )(planes)
+    return out.reshape(m)

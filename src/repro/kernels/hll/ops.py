@@ -1,0 +1,27 @@
+"""jit'd wrapper for the HLL fold kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...rdf.triple_tensor import COL_S_FLAGS
+from .kernel import hll_fold_kernel
+
+
+def hll_fold(planes, cols: tuple[int, ...], p: int, *, valid=None,
+             block_n: int = 1024, interpret: bool = True):
+    """Fold (N, P) planes into (2^p,) HLL registers.
+
+    ``valid`` is accepted for API parity with the jnp path but the kernel
+    derives validity from the s_flags plane directly (zero ⇒ padding row),
+    avoiding a second streamed input.
+    """
+    del valid
+    n = planes.shape[0]
+    if n < block_n:
+        block_n = max(8, ((n + 7) // 8) * 8)
+    pad = (-n) % block_n
+    if pad:
+        planes = jnp.pad(planes, ((0, pad), (0, 0)))
+    return hll_fold_kernel(planes, cols=tuple(cols), p=p,
+                           valid_plane=COL_S_FLAGS, block_n=block_n,
+                           interpret=interpret)

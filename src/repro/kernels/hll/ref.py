@@ -1,0 +1,59 @@
+"""Numpy oracle for the HLL kernel (independent of jax and of core.sketches)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def fmix32_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    x = (x * np.uint32(0x85EBCA6B)).astype(np.uint32)
+    x ^= x >> np.uint32(13)
+    x = (x * np.uint32(0xC2B2AE35)).astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def hash_columns_np(planes: np.ndarray, cols, salt=0x9E3779B9) -> np.ndarray:
+    h = np.full((planes.shape[0],), salt, np.uint32)
+    for c in cols:
+        h = fmix32_np(h ^ planes[:, c].astype(np.uint32))
+        h = (h * np.uint32(5) + np.uint32(0xE6546B64)).astype(np.uint32)
+    return fmix32_np(h)
+
+
+def _clz32(x: np.ndarray) -> np.ndarray:
+    """count-leading-zeros for uint32 (vectorized)."""
+    out = np.full(x.shape, 32, np.int32)
+    nz = x != 0
+    # bit_length via log2 on float64 is exact for uint32 range
+    bl = np.zeros_like(out)
+    bl[nz] = np.floor(np.log2(x[nz].astype(np.float64))).astype(np.int32) + 1
+    out[nz] = 32 - bl[nz]
+    return out
+
+
+def hll_fold_ref(planes: np.ndarray, cols, p: int,
+                 valid: np.ndarray | None = None) -> np.ndarray:
+    h = hash_columns_np(np.asarray(planes), cols)
+    bucket = (h >> np.uint32(32 - p)).astype(np.int32)
+    w = (h << np.uint32(p)).astype(np.uint32)
+    max_rank = 32 - p + 1
+    rank = np.where(w == 0, max_rank, _clz32(w) + 1).astype(np.int32)
+    rank = np.minimum(rank, max_rank)
+    if valid is not None:
+        rank = np.where(np.asarray(valid), rank, 0)
+    regs = np.zeros((1 << p,), np.int32)
+    np.maximum.at(regs, bucket, rank)
+    return regs
+
+
+def hll_estimate_ref(regs: np.ndarray) -> float:
+    m = regs.shape[0]
+    alpha = (0.7213 / (1.0 + 1.079 / m) if m >= 128
+             else {16: 0.673, 32: 0.697, 64: 0.709}.get(m, 0.7213))
+    raw = alpha * m * m / np.sum(np.exp2(-regs.astype(np.float64)))
+    zeros = int((regs == 0).sum())
+    if raw <= 2.5 * m and zeros > 0:
+        return float(m * np.log(m / zeros))
+    return float(raw)

@@ -1,0 +1,2 @@
+"""qap_count kernel package."""
+from . import kernel, ops, ref

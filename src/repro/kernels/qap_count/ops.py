@@ -1,0 +1,25 @@
+"""jit'd public wrapper around the fused count kernel (pads + dispatches)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import COUNTS_WIDTH, fused_count_kernel
+
+
+def fused_count(planes, program, n_counters: int, *, block_n: int = 8192,
+                interpret: bool = True):
+    """Evaluate the fused bytecode over (N, P) planes → (n_counters,) int32.
+
+    Pads N up to a block multiple with zero rows — zero flag planes carry no
+    VALID/KIND bits, so padding is invisible to every well-formed predicate.
+    """
+    n = planes.shape[0]
+    if n < block_n:  # shrink for tiny inputs, keep (8,128)-tile row alignment
+        block_n = max(8, ((n + 7) // 8) * 8)
+    pad = (-n) % block_n
+    if pad:
+        planes = jnp.pad(planes, ((0, pad), (0, 0)))
+    counts = fused_count_kernel(planes, program=program,
+                                n_counters=n_counters, block_n=block_n,
+                                interpret=interpret)
+    return counts[:n_counters]

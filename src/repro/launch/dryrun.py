@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (including
+# repro.*) — jax locks the device count at first init. Do not reorder.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input-shape × mesh) cell:
+  jax.jit(step, in_shardings=…).lower(*abstract_args).compile()
+must succeed on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh.
+Per cell we record compiled.memory_analysis() (per-device bytes — proves it
+fits a 16 GiB v5e chip), cost_analysis() FLOPs/bytes (per-device, post-SPMD
+partitioning), and the collective-op byte totals parsed from the partitioned
+HLO — the inputs to EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun                    # all cells, both meshes
+  python -m repro.launch.dryrun --mesh single      # 16×16 only
+  python -m repro.launch.dryrun --arch din --shape train_batch
+  python -m repro.launch.dryrun --cell din train_batch single  # one cell,
+                                                    # JSON on stdout
+Results stream to results/dryrun.jsonl (resumable — done cells skip).
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}<>= ]+?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(result_sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result_sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-op byte totals from the partitioned HLO."""
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        sig, op = m.group(1), m.group(2).lower()
+        b = _shape_bytes(sig)
+        out[op] = out.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_op": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
+    import jax
+    from repro.configs import REGISTRY, Skip
+    from repro.launch.mesh import make_production_mesh
+
+    spec = REGISTRY[arch]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "mesh_shape": list(mesh.devices.shape)}
+    t0 = time.time()
+    bundle = spec.bundle(shape, mesh, multi_pod=(mesh_kind == "multi"))
+    if isinstance(bundle, Skip):
+        rec.update(status="SKIP", reason=bundle.reason)
+        return rec
+    jit_kw = {}
+    if bundle.out_shardings is not None:
+        jit_kw["out_shardings"] = bundle.out_shardings
+    lowered = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                      donate_argnums=bundle.donate,
+                      **jit_kw).lower(*bundle.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    colls = collective_bytes(compiled.as_text())
+    rec.update(
+        status="OK", description=bundle.description,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "total_per_device": int(mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        flops_per_device=float(cost.get("flops", -1.0)),
+        bytes_accessed_per_device=float(cost.get("bytes accessed", -1.0)),
+        collectives=colls,
+    )
+    if spec.flops_info is not None:
+        rec["flops_info"] = spec.flops_info(shape)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--cell", nargs=3, metavar=("ARCH", "SHAPE", "MESH"),
+                    default=None, help="run one cell, print JSON to stdout")
+    ap.add_argument("--no-subprocess", action="store_true",
+                    help="run cells in-process (default: one subprocess "
+                         "per cell for crash isolation)")
+    args = ap.parse_args()
+
+    if args.cell:
+        rec = run_cell(*args.cell)
+        print(json.dumps(rec))
+        return
+
+    from repro.configs import REGISTRY  # safe: XLA_FLAGS already set
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("OK", "SKIP"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = []
+    for name, spec in REGISTRY.items():
+        if args.arch and name != args.arch:
+            continue
+        for shape in spec.shape_names:
+            if args.shape and shape != args.shape:
+                continue
+            for mk in meshes:
+                if (name, shape, mk) not in done:
+                    cells.append((name, shape, mk))
+
+    print(f"dry-run: {len(cells)} cells to go ({len(done)} already done)",
+          flush=True)
+    for i, (name, shape, mk) in enumerate(cells):
+        t0 = time.time()
+        if args.no_subprocess:
+            try:
+                rec = run_cell(name, shape, mk)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": name, "shape": shape, "mesh": mk,
+                       "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+        else:
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--cell", name, shape, mk],
+                capture_output=True, text=True,
+                env={**os.environ, "PYTHONPATH": "src"})
+            try:
+                rec = json.loads(proc.stdout.strip().splitlines()[-1])
+            except (json.JSONDecodeError, IndexError):
+                rec = {"arch": name, "shape": shape, "mesh": mk,
+                       "status": "FAIL",
+                       "error": (proc.stderr or proc.stdout)[-2000:]}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        dt = time.time() - t0
+        status = rec.get("status")
+        extra = ""
+        if status == "OK":
+            gib = rec["memory"]["total_per_device"] / 2**30
+            extra = f"mem/dev={gib:.2f}GiB"
+        elif status == "SKIP":
+            extra = rec.get("reason", "")[:60]
+        else:
+            extra = rec.get("error", "")[:100].replace("\n", " ")
+        print(f"[{i + 1}/{len(cells)}] {name} × {shape} × {mk}: "
+              f"{status} ({dt:.0f}s) {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

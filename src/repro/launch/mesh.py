@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+init, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (256 chips / pod) single-pod, or 2×16×16 (512 chips) multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests, examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes used for batch/data parallelism (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

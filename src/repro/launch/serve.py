@@ -1,0 +1,80 @@
+"""Serving launcher: batched DIN scoring / LM decode on the smoke configs.
+
+  PYTHONPATH=src python -m repro.launch.serve --model din --batch 64
+  PYTHONPATH=src python -m repro.launch.serve --model lm --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def serve_din(batch: int, n_cands: int, requests: int):
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.models import din as M
+
+    cfg = dataclasses.replace(M.DINConfig(), n_items=100_000, n_cats=1000)
+    params, _ = M.init_din(cfg, jax.random.key(0))
+    fwd = jax.jit(lambda p, b: M.forward(cfg, p, b))
+    rng = np.random.default_rng(0)
+    reduced = {"n_items": cfg.n_items, "n_cats": cfg.n_cats}
+    b = M.synth_batch(cfg, batch, n_cands, rng, reduced=reduced)
+    fwd(params, b)  # compile
+    lat = []
+    for _ in range(requests):
+        b = M.synth_batch(cfg, batch, n_cands, rng, reduced=reduced)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fwd(params, b))
+        lat.append(time.perf_counter() - t0)
+    lat.sort()
+    p50, p99 = lat[len(lat) // 2], lat[min(int(len(lat) * .99), len(lat) - 1)]
+    print(f"din: batch={batch} cands={n_cands} reqs={requests}  "
+          f"p50={p50 * 1e3:.2f}ms p99={p99 * 1e3:.2f}ms  "
+          f"{batch * n_cands / p50:,.0f} scores/s")
+
+
+def serve_lm(n_tokens: int):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import qwen2_5_14b
+    from repro.models import transformer as tf
+
+    cfg = qwen2_5_14b.SMOKE
+    params, _ = tf.init_transformer(cfg, jax.random.key(0))
+    prompt = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 16)),
+        jnp.int32)
+    s_max = 16 + n_tokens
+    logits, cache = tf.prefill(cfg, params, prompt, s_max=s_max)
+    step = jax.jit(lambda p, c, t, i: tf.decode_step(cfg, p, c, t, i))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    t0 = time.perf_counter()
+    for i in range(n_tokens - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(16 + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    dt = time.perf_counter() - t0
+    print(f"lm decode: {n_tokens} tokens in {dt:.2f}s "
+          f"({n_tokens / dt:.1f} tok/s, smoke config)  ids={out[:10]}…")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=["din", "lm"], default="din")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--cands", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+    if args.model == "din":
+        serve_din(args.batch, args.cands, args.requests)
+    else:
+        serve_lm(args.tokens)
+
+
+if __name__ == "__main__":
+    main()

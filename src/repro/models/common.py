@@ -1,0 +1,150 @@
+"""Shared model building blocks (pure-jnp, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal(rng, shape, scale, dtype):
+    return (scale * jax.random.normal(rng, shape)).astype(dtype)
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: (...,) int → cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., head_dim); cos/sin broadcastable to (..., head_dim//2).
+
+    Rotates pairs (x[..., :h], x[..., h:]) — the 'split-half' convention.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos.astype(jnp.float32)
+    sin = sin.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin],
+        axis=-1).astype(x.dtype)
+
+
+def swiglu(gate, up, act: str = "silu"):
+    if act == "silu":
+        return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+    if act == "gelu":
+        return jax.nn.gelu(gate.astype(jnp.float32),
+                           approximate=True).astype(gate.dtype) * up
+    raise ValueError(act)
+
+
+def softmax_xent(logits, labels, z_loss: float = 0.0):
+    """Cross entropy, fp32 reduction; labels -100 are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    if z_loss:
+        nll = nll + z_loss * (logz ** 2) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def causal_mask(q_pos, k_pos, window: int | None = None):
+    """True where attention allowed. q_pos/k_pos: int arrays broadcastable."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return ok
+
+
+def attend(q, k, v, mask=None, scale: float | None = None, kv_map=None,
+           *, q_pos=None, k_pos=None, window: int | None = None,
+           chunk: int | None = None):
+    """Attention with optional KV-chunked online softmax (flash-style).
+
+    q: (B,S,H,D), k/v: (B,T,Hkv,D[v]). Masking: either a dense ``mask``
+    ((S,T) or (B,S,T) bool — small decode masks), or positional causal
+    masking from ``q_pos``/``k_pos`` (+ sliding ``window``) — the positional
+    form is what the chunked path uses so the (S,T) mask is NEVER
+    materialized. ``kv_map`` (H,) gathers k/v per q-head (padded-head TP).
+    ``chunk``: KV block size for the online-softmax scan; None = dense.
+    """
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    if kv_map is not None:
+        k = k[:, :, kv_map]
+        v = v[:, :, kv_map]
+        group = 1
+        kh = h
+    else:
+        group = h // hkv
+        kh = hkv
+
+    qg = q.reshape(b, s, kh, group, d)
+
+    def block_scores(k_blk):
+        return jnp.einsum("bskgd,btkd->bkgst", qg, k_blk,
+                          preferred_element_type=jnp.float32) * scale
+
+    def block_mask(kp):
+        m = kp[None, :] <= q_pos[:, None]
+        if window is not None:
+            m &= kp[None, :] > q_pos[:, None] - window
+        return m  # (S, T_blk)
+
+    use_chunks = (chunk is not None and mask is None and t >= 2 * chunk
+                  and t % chunk == 0)
+    if not use_chunks:
+        scores = block_scores(k)
+        if mask is None:
+            mask = block_mask(k_pos)
+        mask_b = mask[None, None, None] if mask.ndim == 2 \
+            else mask[:, None, None]
+        scores = jnp.where(mask_b, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+        return out.reshape(b, s, h, v.shape[-1])
+
+    # ---- online softmax over KV chunks (never materializes S×T) ----
+    n_blk = t // chunk
+    kb = k.reshape(b, n_blk, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blk, chunk, kh, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(n_blk, chunk)
+
+    m0 = jnp.full((b, kh, group, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, group, s), jnp.float32)
+    a0 = jnp.zeros((b, s, kh, group, v.shape[-1]), jnp.float32)
+
+    def step(carry, blk):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, kp_blk = blk
+        sc = block_scores(k_blk)                       # (b,kh,g,s,chunk)
+        msk = block_mask(kp_blk)[None, None, None]
+        sc = jnp.where(msk, sc, -1e30)
+        m_blk = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_run, m_blk)
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_run * corr + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v_blk)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.astype(v.dtype).reshape(b, s, h, v.shape[-1])

@@ -1,0 +1,133 @@
+"""GNN substrate: segment-op message passing over edge-index arrays.
+
+JAX sparse is BCOO-only, so message passing is built directly on
+``jax.ops.segment_sum``/``segment_max`` over an (E,) src/dst edge index —
+this IS the system's sparse layer (per the assignment's kernel taxonomy
+§GNN). Graphs are struct-of-arrays; batched small graphs are block-diagonal
+with a ``graph_id`` vector for pooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GraphBatch:
+    """node_feat (N,F); edge src/dst (E,); optional positions, edge feats,
+    labels, graph_id (for pooled graph-level tasks)."""
+    node_feat: Any
+    src: Any
+    dst: Any
+    n_nodes: int
+    edge_feat: Any | None = None
+    positions: Any | None = None
+    labels: Any | None = None
+    label_mask: Any | None = None
+    graph_id: Any | None = None
+    n_graphs: int = 1
+
+
+def gather_src(h, src):
+    return h[src]
+
+
+def scatter_sum(msgs, dst, n_nodes):
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+
+
+def scatter_mean(msgs, dst, n_nodes):
+    s = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((msgs.shape[0],), msgs.dtype), dst,
+                              num_segments=n_nodes)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(msgs, dst, n_nodes):
+    return jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+
+
+def segment_softmax(scores, dst, n_nodes):
+    """Edge-wise softmax normalized over incoming edges of each dst node."""
+    m = jax.ops.segment_max(scores, dst, num_segments=n_nodes)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m[dst])
+    z = jax.ops.segment_sum(e, dst, num_segments=n_nodes)
+    return e / jnp.maximum(z[dst], 1e-9)
+
+
+def mlp(params, x, act=jax.nn.relu, final_act=False):
+    """params: list of (w, b)."""
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_mlp(rng, dims, logical_hidden="mlp", dtype=jnp.float32,
+             lead: tuple[int, ...] = (), lead_logical: tuple = ()):
+    """Returns list of ((w, logical), (b, logical)) pairs.
+
+    Hidden dims get ``logical_hidden`` (TP-shardable); in/out dims of the
+    first/last matrices stay replicated. ``lead`` adds stacking dims (layer
+    scan)."""
+    out = []
+    for i in range(len(dims) - 1):
+        is_last = i == len(dims) - 2
+        in_l = None if i == 0 else logical_hidden
+        out_l = None if is_last else logical_hidden
+        wshape = lead + (dims[i], dims[i + 1])
+        bshape = lead + (dims[i + 1],)
+        if rng is None:
+            w = jax.ShapeDtypeStruct(wshape, dtype)
+            b = jax.ShapeDtypeStruct(bshape, dtype)
+        else:
+            rng, k = jax.random.split(rng)
+            w = (jax.random.normal(k, wshape) / np.sqrt(dims[i])).astype(dtype)
+            b = jnp.zeros(bshape, dtype)
+        out.append(((w, lead_logical + (in_l, out_l)),
+                    (b, lead_logical + (out_l,))))
+    return out
+
+
+def block_diagonal_batch(n_graphs: int, nodes_per: int, edges_per: int,
+                         d_feat: int, rng: np.random.Generator,
+                         n_classes: int = 1, with_pos: bool = False
+                         ) -> GraphBatch:
+    """Synthetic batch of small graphs as one block-diagonal graph."""
+    N = n_graphs * nodes_per
+    E = n_graphs * edges_per
+    src = np.concatenate([
+        rng.integers(0, nodes_per, edges_per) + g * nodes_per
+        for g in range(n_graphs)])
+    dst = np.concatenate([
+        rng.integers(0, nodes_per, edges_per) + g * nodes_per
+        for g in range(n_graphs)])
+    gid = np.repeat(np.arange(n_graphs), nodes_per)
+    return GraphBatch(
+        node_feat=rng.normal(size=(N, d_feat)).astype(np.float32),
+        src=src.astype(np.int32), dst=dst.astype(np.int32), n_nodes=N,
+        positions=(rng.normal(size=(N, 3)).astype(np.float32)
+                   if with_pos else None),
+        labels=rng.integers(0, n_classes, n_graphs).astype(np.int32),
+        graph_id=gid.astype(np.int32), n_graphs=n_graphs)
+
+
+def random_graph(n_nodes: int, n_edges: int, d_feat: int,
+                 rng: np.random.Generator, n_classes: int = 8,
+                 with_pos: bool = False) -> GraphBatch:
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    return GraphBatch(
+        node_feat=rng.normal(size=(n_nodes, d_feat)).astype(np.float32),
+        src=src, dst=dst, n_nodes=n_nodes,
+        positions=(rng.normal(size=(n_nodes, 3)).astype(np.float32)
+                   if with_pos else None),
+        labels=rng.integers(0, n_classes, n_nodes).astype(np.int32),
+        label_mask=np.ones((n_nodes,), np.float32))

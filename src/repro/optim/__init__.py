@@ -1,0 +1,4 @@
+"""Optimizers."""
+from .adamw import AdamW, cosine_schedule
+
+__all__ = ["AdamW", "cosine_schedule"]

@@ -1,0 +1,88 @@
+"""AdamW with fp32 state (ZeRO-style: states inherit the params' sharding,
+which under FSDP+TP is already fully sharded over the mesh)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # bf16 moment storage (Gopher-style) halves optimizer HBM at scale;
+    # update math stays fp32 (moments cast in, cast back out).
+    state_dtype: Any = jnp.float32
+
+    def init(self, params):
+        dt = self.state_dtype
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def init_abstract(self, params):
+        dt = self.state_dtype
+        return {
+            "m": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, dt), params),
+            "v": jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, dt), params),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def state_logical(self, logical):
+        """Optimizer states shard exactly like their params."""
+        return {"m": logical, "v": logical, "count": ()}
+
+    def update(self, params, grads, state):
+        count = state["count"] + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        dt = self.state_dtype
+        m = jax.tree.map(
+            lambda m_, g: (self.b1 * m_.astype(jnp.float32)
+                           + (1 - self.b1) * g).astype(dt),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: (self.b2 * v_.astype(jnp.float32)
+                           + (1 - self.b2) * g * g).astype(dt),
+            state["v"], grads)
+        c1 = 1 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            m_ = m_.astype(jnp.float32)
+            v_ = v_.astype(jnp.float32)
+            step = (m_ / c1) / (jnp.sqrt(v_ / c2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        frac = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(c < warmup, warm, cos)
+    return lr

@@ -1,0 +1,20 @@
+"""RDF substrate: parsing, dictionary encoding, the TripleTensor main dataset,
+and synthetic data generation (BSBM-style, as in the paper's evaluation)."""
+from .parser import Term, parse_lines, parse_ntriples, parse_term
+from .encoder import TermDictionary, encode, encode_ntriples
+from .triple_tensor import (
+    TripleTensor, from_columns, empty,
+    COL_S, COL_P, COL_O, COL_S_FLAGS, COL_P_FLAGS, COL_O_FLAGS,
+    COL_S_LEN, COL_P_LEN, COL_O_LEN, COL_O_DT, N_PLANES, PLANE_NAMES)
+from .generator import DirtProfile, bsbm_ntriples, synth_encoded
+from . import vocab
+
+__all__ = [
+    "Term", "parse_lines", "parse_ntriples", "parse_term",
+    "TermDictionary", "encode", "encode_ntriples",
+    "TripleTensor", "from_columns", "empty", "vocab",
+    "DirtProfile", "bsbm_ntriples", "synth_encoded",
+    "COL_S", "COL_P", "COL_O", "COL_S_FLAGS", "COL_P_FLAGS", "COL_O_FLAGS",
+    "COL_S_LEN", "COL_P_LEN", "COL_O_LEN", "COL_O_DT", "N_PLANES",
+    "PLANE_NAMES",
+]

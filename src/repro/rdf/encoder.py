@@ -1,0 +1,112 @@
+"""Dictionary encoder: Terms → integer ids + metadata flag planes.
+
+This is the single string-touching stage (host-side, vectorizable across
+cores). Everything any metric predicate may ask about a term is computed here
+once and packed into the TripleTensor planes.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from . import vocab
+from .parser import Term
+from .triple_tensor import TripleTensor, N_PLANES, from_columns
+
+
+class TermDictionary:
+    """Interns terms → dense int32 ids and caches their flag metadata."""
+
+    def __init__(self, base_namespaces: Sequence[str] = ()):
+        self.base_namespaces = tuple(base_namespaces)
+        self._ids: dict[str, int] = {}
+        # Per-term metadata, indexed by id.
+        self.flags: list[int] = []
+        self.lengths: list[int] = []
+        self.datatypes: list[int] = []
+        self.terms: list[str] = []
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def _term_flags(self, t: Term) -> tuple[int, int, int]:
+        """Returns (flags, length, datatype_id) for a term."""
+        f = vocab.VALID
+        length = len(t.value)
+        dt_id = vocab.DT_NONE
+        if t.kind == "iri":
+            f |= vocab.KIND_IRI
+            if vocab.iri_valid(t.value):
+                f |= vocab.IRI_VALID
+            if any(t.value.startswith(ns) for ns in self.base_namespaces):
+                f |= vocab.INTERNAL
+            if t.value in vocab.LICENSE_PREDICATES:
+                f |= vocab.IS_LICENSE_PRED
+            if t.value in vocab.LICENSE_INDICATION_PREDICATES:
+                f |= vocab.IS_LICENSE_INDICATION
+            if t.value in vocab.LABEL_PREDICATES:
+                f |= vocab.IS_LABEL_PRED
+            if t.value == vocab.SAMEAS:
+                f |= vocab.IS_SAMEAS
+            if t.value == vocab.RDFTYPE:
+                f |= vocab.IS_RDFTYPE
+        elif t.kind == "blank":
+            f |= vocab.KIND_BLANK
+        else:  # literal
+            f |= vocab.KIND_LITERAL
+            if t.lang:
+                f |= vocab.HAS_LANG
+                dt_id = vocab.DT_LANGSTRING
+            if t.datatype:
+                f |= vocab.HAS_DATATYPE
+                dt_id = vocab.datatype_id(t.datatype)
+            if vocab.lexical_ok(t.value, dt_id if t.datatype else vocab.DT_STRING):
+                f |= vocab.LEXICAL_OK
+            if vocab.is_license_statement(t.value):
+                f |= vocab.IS_LICENSE_STATEMENT
+        return f, length, dt_id
+
+    def intern(self, t: Term) -> int:
+        key = t.key()
+        tid = self._ids.get(key)
+        if tid is not None:
+            return tid
+        tid = len(self._ids)
+        self._ids[key] = tid
+        f, length, dt = self._term_flags(t)
+        self.flags.append(f)
+        self.lengths.append(length)
+        self.datatypes.append(dt)
+        self.terms.append(key)
+        return tid
+
+
+def encode(triples: Iterable[tuple[Term, Term, Term]],
+           base_namespaces: Sequence[str] = (),
+           dictionary: TermDictionary | None = None) -> TripleTensor:
+    """Encode parsed triples into a TripleTensor (the *main dataset*)."""
+    d = dictionary or TermDictionary(base_namespaces)
+    s_ids, p_ids, o_ids = [], [], []
+    for s, p, o in triples:
+        s_ids.append(d.intern(s))
+        p_ids.append(d.intern(p))
+        o_ids.append(d.intern(o))
+    flags = np.asarray(d.flags, dtype=np.int32)
+    lengths = np.asarray(d.lengths, dtype=np.int32)
+    dts = np.asarray(d.datatypes, dtype=np.int32)
+    s = np.asarray(s_ids, dtype=np.int32)
+    p = np.asarray(p_ids, dtype=np.int32)
+    o = np.asarray(o_ids, dtype=np.int32)
+    if len(s) == 0:
+        return TripleTensor(np.zeros((0, N_PLANES), np.int32), 0, len(d))
+    tt = from_columns(
+        s, p, o, flags[s], flags[p], flags[o],
+        lengths[s], lengths[p], lengths[o], dts[o], n_terms=len(d))
+    return tt
+
+
+def encode_ntriples(text: str, base_namespaces: Sequence[str] = ()
+                    ) -> TripleTensor:
+    from .parser import parse_ntriples
+    return encode(parse_ntriples(text), base_namespaces)

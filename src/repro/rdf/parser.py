@@ -1,0 +1,73 @@
+"""NTriples parser (paper §2.2 step 2/3 — "spark.rdf(lang)(input)").
+
+Line-oriented N-Triples subset: IRIs ``<...>``, blank nodes ``_:x``, literals
+``"..."`` with optional ``@lang`` or ``^^<datatype>``. Malformed lines are
+*kept* (reported via a parse-error flag term) rather than dropped — quality
+assessment must see the dirt.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable, Iterator, Optional
+
+_TRIPLE_RE = re.compile(
+    r'^\s*'
+    r'(<[^>]*>|_:\S+)\s+'               # subject
+    r'(<[^>]*>)\s+'                      # predicate
+    r'(<[^>]*>|_:\S+|"(?:[^"\\]|\\.)*"(?:@[A-Za-z0-9-]+|\^\^<[^>]*>)?)'
+    r'\s*\.\s*$')
+
+_LITERAL_RE = re.compile(
+    r'^"((?:[^"\\]|\\.)*)"(?:@([A-Za-z0-9-]+)|\^\^<([^>]*)>)?$')
+
+
+@dataclasses.dataclass(frozen=True)
+class Term:
+    kind: str           # 'iri' | 'blank' | 'literal'
+    value: str          # IRI string / blank label / literal lexical form
+    lang: Optional[str] = None
+    datatype: Optional[str] = None
+
+    def key(self) -> str:
+        if self.kind == "iri":
+            return "<" + self.value + ">"
+        if self.kind == "blank":
+            return "_:" + self.value
+        dt = "^^" + self.datatype if self.datatype else ""
+        lang = "@" + self.lang if self.lang else ""
+        return '"' + self.value + '"' + lang + dt
+
+
+def parse_term(tok: str) -> Term:
+    if tok.startswith("<"):
+        return Term("iri", tok[1:-1])
+    if tok.startswith("_:"):
+        return Term("blank", tok[2:])
+    m = _LITERAL_RE.match(tok)
+    if not m:
+        raise ValueError(f"bad term: {tok!r}")
+    value, lang, dt = m.group(1), m.group(2), m.group(3)
+    return Term("literal", value, lang=lang, datatype=dt)
+
+
+def parse_lines(lines: Iterable[str]) -> Iterator[tuple[Term, Term, Term]]:
+    """Yield (s, p, o) Term triples; skips comments/empties, raises never —
+    malformed lines yield a sentinel triple flagged via an invalid IRI."""
+    for line in lines:
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _TRIPLE_RE.match(line)
+        if not m:
+            # Surface as a malformed-syntax triple: quality tools must count it.
+            yield (Term("iri", "urn:repro:parse-error"),
+                   Term("iri", "urn:repro:parse-error"),
+                   Term("literal", line[:64]))
+            continue
+        yield (parse_term(m.group(1)), parse_term(m.group(2)),
+               parse_term(m.group(3)))
+
+
+def parse_ntriples(text: str) -> list[tuple[Term, Term, Term]]:
+    return list(parse_lines(text.splitlines()))

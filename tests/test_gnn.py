@@ -1,0 +1,148 @@
+"""GNN models: Wigner properties, equivariance, chunked-edge equivalence,
+sampler correctness, segment-op substrate."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.sampler import CSRGraph, sample_subgraph, subgraph_shape
+from repro.models.gnn import equiformer_v2 as eq
+from repro.models.gnn import gatedgcn, dimenet, graphcast
+from repro.models.gnn.common import (block_diagonal_batch, random_graph,
+                                     scatter_sum, segment_softmax)
+from repro.models.gnn.wigner import (real_sh, rotation_to_axis, wigner_stack)
+
+
+def _rand_rotations(n, rng):
+    A = rng.normal(size=(n, 3, 3))
+    Q, _ = np.linalg.qr(A)
+    return Q * np.sign(np.linalg.det(Q))[:, None, None]
+
+
+def test_wigner_equivariance_property():
+    rng = np.random.default_rng(0)
+    Q = jnp.asarray(_rand_rotations(8, rng), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    Rv = jnp.einsum("bij,bj->bi", Q, v)
+    L = 6
+    D = wigner_stack(Q, L)
+    sh_v, sh_Rv = real_sh(v, L), real_sh(Rv, L)
+    for l in range(L + 1):
+        s, e = l * l, (l + 1) * (l + 1)
+        lhs = jnp.einsum("bij,bj->bi", D[l], sh_v[:, s:e])
+        assert float(jnp.abs(lhs - sh_Rv[:, s:e]).max()) < 1e-4 * (l + 1)
+        # orthogonality
+        I = jnp.einsum("bij,bkj->bik", D[l], D[l])
+        assert float(jnp.abs(I - jnp.eye(2 * l + 1)[None]).max()) < 2e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_rotation_to_axis_property(seed):
+    rng = np.random.default_rng(seed)
+    v = np.vstack([rng.normal(size=(20, 3)),
+                   [[0, 0, 1], [0, 0, -1], [1e-7, 0, -1]]]).astype(np.float32)
+    R = np.asarray(rotation_to_axis(jnp.asarray(v)))
+    vn = v / np.linalg.norm(v, axis=1, keepdims=True)
+    out = np.einsum("bij,bj->bi", R, vn)
+    assert np.abs(out - [0, 0, 1]).max() < 1e-5
+    assert np.abs(R @ R.transpose(0, 2, 1) - np.eye(3)).max() < 1e-5
+    assert np.linalg.det(R).min() > 0.999
+
+
+def test_equiformer_rotation_translation_invariance():
+    rng = np.random.default_rng(3)
+    cfg = eq.EquiformerV2Config(n_layers=2, d_hidden=16, l_max=4, m_max=2,
+                                n_heads=4, d_feat=8)
+    params, _ = eq.init_equiformer(cfg, jax.random.key(0))
+    b = block_diagonal_batch(3, 8, 20, 8, rng, n_classes=1, with_pos=True)
+    out = eq.forward(cfg, params, b)
+    Q = _rand_rotations(1, rng)[0]
+    b2 = dataclasses.replace(b, positions=(b.positions @ Q.T
+                                           ).astype(np.float32))
+    rel = float(jnp.abs(out - eq.forward(cfg, params, b2)).max()
+                / (jnp.abs(out).max() + 1e-9))
+    assert rel < 2e-3, rel
+    b3 = dataclasses.replace(b, positions=b.positions + np.float32([1, -2, 3]))
+    rel = float(jnp.abs(out - eq.forward(cfg, params, b3)).max()
+                / (jnp.abs(out).max() + 1e-9))
+    assert rel < 2e-3, rel
+
+
+def test_equiformer_edge_chunking_exact():
+    rng = np.random.default_rng(7)
+    base = dict(n_layers=2, d_hidden=16, l_max=3, m_max=2, n_heads=2,
+                d_feat=8)
+    cfg1 = eq.EquiformerV2Config(**base, edge_chunks=1)
+    cfg4 = eq.EquiformerV2Config(**base, edge_chunks=4)
+    params, _ = eq.init_equiformer(cfg1, jax.random.key(0))
+    b = block_diagonal_batch(3, 8, 20, 8, rng, n_classes=1, with_pos=True)
+    o1, o4 = eq.forward(cfg1, params, b), eq.forward(cfg4, params, b)
+    assert float(jnp.abs(o1 - o4).max() / (jnp.abs(o1).max() + 1e-9)) < 1e-4
+
+
+def test_dimenet_triplets():
+    src = np.array([0, 1, 2, 1], np.int32)   # edges: 0→1, 1→2, 2→0, 1→0
+    dst = np.array([1, 2, 0, 0], np.int32)
+    t_kj, t_ji, mask = dimenet.build_triplets(src, dst, cap=4)
+    pairs = {(int(a), int(b)) for a, b, m in zip(t_kj, t_ji, mask) if m}
+    # edge 1 (1→2): in-edges of 1 = edge 0 (0→1), k=0≠i=2 → (0,1)
+    assert (0, 1) in pairs
+    # edge 2 (2→0): in-edges of 2 = edge 1 (1→2) → (1,2)
+    assert (1, 2) in pairs
+    # edge 0 (0→1): in-edges of 0 = edges 2,3; edge 3 is 1→0 (k=1==i) excluded
+    assert (2, 0) in pairs and (3, 0) not in pairs
+
+
+def test_bessel_basis_accuracy():
+    from repro.models.gnn.dimenet import (_jl_stack, _spherical_jn,
+                                          bessel_roots)
+    xs = np.linspace(0.01, 45, 200)
+    jl = np.asarray(_jl_stack(7, jnp.asarray(xs)))
+    ref = np.stack([_spherical_jn(l, xs) for l in range(7)], -1)
+    assert np.abs(jl - ref).max() < 1e-4
+    r = bessel_roots(7, 6)
+    for l in range(7):
+        for n in range(6):
+            assert abs(_spherical_jn(l, np.array([r[l, n]]))[0]) < 1e-10
+
+
+def test_gatedgcn_smoke_and_grads():
+    rng = np.random.default_rng(0)
+    cfg = gatedgcn.GatedGCNConfig(n_layers=3, d_hidden=16, d_feat=12,
+                                  n_classes=4)
+    params, _ = gatedgcn.init_gatedgcn(cfg, jax.random.key(0))
+    g = random_graph(50, 200, 12, rng, n_classes=4)
+    loss, grads = jax.value_and_grad(
+        lambda p: gatedgcn.loss_fn(cfg, p, g))(params)
+    assert np.isfinite(float(loss))
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(grads))
+
+
+def test_segment_softmax_normalizes():
+    scores = jnp.asarray(np.random.default_rng(0).normal(size=(10, 2)),
+                         jnp.float32)
+    dst = jnp.asarray([0, 0, 0, 1, 1, 2, 2, 2, 2, 3], jnp.int32)
+    w = segment_softmax(scores, dst, 4)
+    sums = jax.ops.segment_sum(w, dst, num_segments=4)
+    np.testing.assert_allclose(np.asarray(sums), 1.0, atol=1e-5)
+
+
+def test_neighbor_sampler():
+    rng = np.random.default_rng(1)
+    n, e = 500, 4000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    g = CSRGraph.from_edges(src, dst, n)
+    seeds = rng.choice(n, 32, replace=False).astype(np.int64)
+    sub = sample_subgraph(g, seeds, (5, 3), rng)
+    n_exp, e_exp = subgraph_shape(32, (5, 3))
+    assert len(sub.node_ids) == n_exp
+    assert len(sub.src) == e_exp
+    assert (sub.node_ids[:32] == seeds).all()      # seeds first
+    assert sub.src.max() < n_exp and sub.dst.max() < n_exp
+    # every sampled edge's endpoint nodes exist in the subgraph
+    assert (sub.dst < 32 + 32 * 5).all()           # dsts are in-frontier

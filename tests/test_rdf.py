@@ -1,0 +1,115 @@
+"""RDF substrate: parser, encoder, generators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.rdf import (DirtProfile, Term, bsbm_ntriples, encode,
+                       encode_ntriples, parse_ntriples, parse_term,
+                       synth_encoded, vocab)
+from repro.rdf.triple_tensor import (COL_O_FLAGS, COL_P_FLAGS, COL_S_FLAGS,
+                                     COL_S_LEN, N_PLANES)
+
+
+def test_parse_terms():
+    t = parse_term("<http://ex.org/a>")
+    assert t.kind == "iri" and t.value == "http://ex.org/a"
+    t = parse_term("_:b0")
+    assert t.kind == "blank"
+    t = parse_term('"hello"@en')
+    assert t.kind == "literal" and t.lang == "en"
+    t = parse_term('"42"^^<http://www.w3.org/2001/XMLSchema#integer>')
+    assert t.datatype.endswith("integer")
+
+
+def test_parse_ntriples_roundtrip():
+    text = ('<http://a> <http://b> "x"@en .\n'
+            '# comment\n'
+            '<http://a> <http://b> <http://c> .\n'
+            '_:n0 <http://b> "3.14"^^<http://www.w3.org/2001/XMLSchema#decimal> .\n')
+    triples = parse_ntriples(text)
+    assert len(triples) == 3
+    assert triples[0][2].lang == "en"
+    assert triples[2][0].kind == "blank"
+
+
+def test_malformed_line_surfaces_as_parse_error_triple():
+    triples = parse_ntriples("this is not a triple\n")
+    assert len(triples) == 1
+    assert triples[0][0].value == "urn:repro:parse-error"
+
+
+def test_encoder_flags():
+    text = ('<http://base/s> <http://purl.org/dc/terms/license> '
+            '<http://cc.org/by> .\n'
+            '<http://base/s> <http://www.w3.org/2000/01/rdf-schema#label> '
+            '"a label"@en .\n'
+            '<http://base/s> <http://base/p> '
+            '"notanumber"^^<http://www.w3.org/2001/XMLSchema#integer> .\n')
+    tt = encode_ntriples(text, base_namespaces=("http://base/",))
+    assert len(tt) == 3
+    sf = tt.planes[:, COL_S_FLAGS]
+    assert all(sf & vocab.KIND_IRI)
+    assert all(sf & vocab.INTERNAL)
+    pf = tt.planes[:, COL_P_FLAGS]
+    assert pf[0] & vocab.IS_LICENSE_PRED
+    assert pf[1] & vocab.IS_LABEL_PRED
+    of = tt.planes[:, COL_O_FLAGS]
+    assert of[1] & vocab.HAS_LANG
+    assert of[2] & vocab.HAS_DATATYPE
+    assert not (of[2] & vocab.LEXICAL_OK)  # malformed integer
+
+
+def test_lexical_validation():
+    assert vocab.lexical_ok("42", vocab.DT_INTEGER)
+    assert not vocab.lexical_ok("4x2", vocab.DT_INTEGER)
+    assert vocab.lexical_ok("2020-01-31", vocab.DT_DATE)
+    assert not vocab.lexical_ok("2020-1-31T", vocab.DT_DATE)
+    assert vocab.lexical_ok("-1.5e3", vocab.DT_DOUBLE)
+    assert vocab.lexical_ok("true", vocab.DT_BOOLEAN)
+    assert not vocab.lexical_ok("yes", vocab.DT_BOOLEAN)
+
+
+def test_bsbm_generator_parses_and_encodes():
+    text = bsbm_ntriples(40, seed=3)
+    tt = encode_ntriples(text, base_namespaces=("http://bsbm.example.org/",))
+    assert len(tt) > 100
+    assert tt.n_terms > 50
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 2000), seed=st.integers(0, 10_000))
+def test_synth_encoded_invariants(n, seed):
+    """The fast generator must produce encoder-consistent planes."""
+    tt = synth_encoded(n, seed=seed)
+    assert tt.planes.shape == (n, N_PLANES)
+    for col in (COL_S_FLAGS, COL_P_FLAGS, COL_O_FLAGS):
+        f = tt.planes[:, col]
+        assert (f & vocab.VALID).all(), "real rows carry VALID"
+        kinds = ((f & vocab.KIND_IRI) > 0).astype(int) + \
+                ((f & vocab.KIND_LITERAL) > 0).astype(int) + \
+                ((f & vocab.KIND_BLANK) > 0).astype(int)
+        assert (kinds == 1).all(), "term kinds are mutually exclusive"
+    # subjects/predicates are never literals
+    assert not (tt.planes[:, COL_S_FLAGS] & vocab.KIND_LITERAL).any()
+    assert not (tt.planes[:, COL_P_FLAGS] & vocab.KIND_LITERAL).any()
+    # HAS_LANG/HAS_DATATYPE only on literals
+    of = tt.planes[:, COL_O_FLAGS]
+    lit = (of & vocab.KIND_LITERAL) > 0
+    assert not (of[~lit] & vocab.HAS_LANG).any()
+    assert not (of[~lit] & vocab.HAS_DATATYPE).any()
+
+
+def test_padding_is_invisible():
+    tt = synth_encoded(100, seed=1)
+    padded = tt.padded_to(64)
+    assert padded.n_rows == 128 and padded.n_valid == 100
+    assert (padded.planes[100:] == 0).all()
+
+
+def test_chunks_cover_exactly():
+    tt = synth_encoded(1000, seed=2)
+    chunks = tt.chunks(7)
+    assert sum(len(c) for c in chunks) == 1000
+    rows = np.concatenate([c.planes for c in chunks])
+    valid = rows[(rows[:, COL_S_FLAGS] & vocab.VALID) > 0]
+    assert valid.shape[0] == 1000

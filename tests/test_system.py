@@ -1,0 +1,69 @@
+"""End-to-end system behaviour: ingest → assess → report → fault-tolerant
+re-run — the paper's full workflow (Fig 1) on one box."""
+import json
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import ALL_METRICS, PAPER_METRICS, QualityEvaluator, report
+from repro.dist import ChunkScheduler, FaultInjector, WorkerFailure
+from repro.rdf import bsbm_ntriples, encode_ntriples, synth_encoded
+
+BASE_NS = ("http://bsbm.example.org/",)
+
+
+def test_end_to_end_pipeline():
+    # step 2-3 (paper Fig 1): retrieve + parse + map into the main dataset
+    nt = bsbm_ntriples(80, seed=13)
+    tt = encode_ntriples(nt, base_namespaces=BASE_NS)
+    assert len(tt) > 200
+    # step 4: metric evaluation (fused single pass over all metrics)
+    ev = QualityEvaluator(ALL_METRICS, fused=True, backend="pallas")
+    res = ev.assess(tt)
+    assert res.passes == 1
+    assert res.values["L1"] == 1.0          # BSBM data carries a license
+    # DQV machine-readable output (paper §2.3 line 10)
+    dqv = report.to_dqv(res, dataset_uri="urn:test:bsbm")
+    assert len(dqv["measurements"]) == len(ALL_METRICS)
+    parsed = json.loads(report.to_json(res))
+    assert parsed["nTriples"] == len(tt)
+    nt_report = report.to_ntriples(res)
+    assert "dqv#value" in nt_report or "dqv" in nt_report
+
+
+def test_fault_tolerant_run_matches_single_pass():
+    tt = synth_encoded(30_000, seed=21)
+    ev = QualityEvaluator(ALL_METRICS, fused=True, backend="jnp")
+    ref = ev.assess(tt)
+    with tempfile.TemporaryDirectory() as d:
+        sched = ChunkScheduler(ev, n_chunks=12, checkpoint_dir=d,
+                               checkpoint_every=4)
+        faults = FaultInjector(fail_chunks={2: 1, 9: 2},
+                               crash_after_merges=8)
+        with pytest.raises(WorkerFailure):
+            sched.run(tt, faults=faults)
+        # elastic restart: new scheduler instance resumes from checkpoint
+        sched2 = ChunkScheduler(ev, n_chunks=12, checkpoint_dir=d,
+                                checkpoint_every=4)
+        res, stats = sched2.run(tt)
+        assert stats.resumed_from is not None
+        assert stats.attempts < 12, "resume must skip completed chunks"
+    for k, v in ref.values.items():
+        assert res.values[k] == pytest.approx(v, abs=1e-9), k
+
+
+def test_speculative_duplicate_merge_is_idempotent():
+    tt = synth_encoded(8_000, seed=4)
+    ev = QualityEvaluator(PAPER_METRICS, fused=True, backend="jnp")
+    state = ev.chunk_state_init()
+    chunks = tt.chunks(4)
+    for cid, c in enumerate(chunks):
+        counts, regs = ev.eval_chunk(c)
+        state = QualityEvaluator.merge_chunk(state, cid, counts, regs)
+        # duplicate delivery (speculative copy finishing late)
+        state = QualityEvaluator.merge_chunk(state, cid, counts, regs)
+    res = ev.finalize_state(state, len(tt))
+    ref = ev.assess(tt)
+    for k in ref.values:
+        assert res.values[k] == pytest.approx(ref.values[k], abs=1e-9)
