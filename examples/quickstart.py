@@ -2,24 +2,27 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import ALL_METRICS, QualityEvaluator, report
-from repro.rdf import bsbm_ntriples, encode_ntriples
+from repro import qa
+from repro.core import report
+from repro.rdf import bsbm_ntriples
 
 # 1) get RDF data (here: synthetic BSBM e-commerce triples with known dirt)
 nt_text = bsbm_ntriples(n_products=200, seed=42)
 
-# 2) parse + dictionary-encode into the main dataset (paper Fig 1, steps 2-3)
-dataset = encode_ntriples(nt_text,
-                          base_namespaces=("http://bsbm.example.org/",))
-print(f"main dataset: {len(dataset):,} triples, {dataset.n_terms:,} terms")
+# 2+3) one call: parse + dictionary-encode + evaluate ALL metrics in ONE
+#      fused pass (paper Fig 1 steps 2-4 + our planner)
+result = qa.assess(nt_text, metrics="all", backend="pallas",
+                   base=("http://bsbm.example.org/",))
 
-# 3) evaluate ALL metrics in ONE fused pass (paper step 4 + our planner)
-evaluator = QualityEvaluator(ALL_METRICS, fused=True, backend="pallas")
-result = evaluator.assess(dataset)
-
-print(f"\n{len(result.values)} metrics from {result.passes} data pass:")
+print(f"{len(result.values)} metrics from {result.passes} data pass "
+      f"over {result.n_triples:,} triples:")
 for name, value in sorted(result.values.items()):
     print(f"  {name:10s} {value:.4f}")
+
+# the same assessment, spelled as a reusable fluent pipeline
+pipe = (qa.pipeline().metrics("paper").backend("pallas")
+          .base("http://bsbm.example.org/"))
+print(f"\n{pipe.describe()} -> L1={pipe.run(nt_text).values['L1']}")
 
 # 4) machine-readable DQV report (paper §2.3)
 print("\nDQV (first 300 chars):")

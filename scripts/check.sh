@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite plus a CLI smoke run through the
+# repro.qa pipeline (fused + chunked/checkpointed). Run from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== CLI smoke: single-shot =="
+python -m repro.launch.assess --synthetic 20000 --metrics paper
+
+echo "== CLI smoke: chunked + checkpointed =="
+ckpt="$(mktemp -d)"
+trap 'rm -rf "$ckpt"' EXIT
+python -m repro.launch.assess --synthetic 20000 --metrics paper \
+    --chunks 4 --checkpoint-dir "$ckpt"
+
+echo "OK"

@@ -1,0 +1,22 @@
+"""Version-compatibility helpers (kept repo-local — we never mutate the
+``jax`` namespace itself; third-party feature detection must keep seeing
+the real API surface of the installed version).
+
+``shard_map``: jax ≥ 0.5 exposes ``jax.shard_map(..., check_vma=...)``;
+0.4.x has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+This wrapper presents the new-style keyword on both.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=bool(check_vma))

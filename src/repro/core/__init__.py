@@ -9,7 +9,8 @@ from .expr import (AnyBits, Cmp, EqPlanes, Expr, HasBits, And, Or, Not,
                    compile_program, eval_program_jnp, program_stack_depth)
 from .metrics import (ALL_METRICS, EXTENDED_METRICS, PAPER_METRICS,
                       SKETCH_METRICS, REGISTRY, Metric, get_metrics,
-                      URI_TOO_LONG)
+                      URI_TOO_LONG, register, unregister, ratio_metric,
+                      exists_metric, count_metric, qap_metric)
 from .planner import Plan, plan, plan_single
 from .evaluator import AssessmentResult, QualityEvaluator
 from . import sketches, report
@@ -19,6 +20,8 @@ __all__ = [
     "compile_program", "eval_program_jnp", "program_stack_depth",
     "ALL_METRICS", "EXTENDED_METRICS", "PAPER_METRICS", "SKETCH_METRICS",
     "REGISTRY", "Metric", "get_metrics", "URI_TOO_LONG",
+    "register", "unregister", "ratio_metric", "exists_metric",
+    "count_metric", "qap_metric",
     "Plan", "plan", "plan_single",
     "AssessmentResult", "QualityEvaluator", "sketches", "report",
 ]

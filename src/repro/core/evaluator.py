@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..rdf.triple_tensor import TripleTensor, N_PLANES
+from .. import compat
+from ..rdf.triple_tensor import TripleTensor, COL_S_FLAGS, N_PLANES
 from . import sketches as hll
 from .expr import eval_program_jnp
 from .metrics import ALL_METRICS, Metric, get_metrics
@@ -37,6 +38,7 @@ class AssessmentResult:
     sketch_estimates: dict[str, float]
     n_triples: int
     passes: int                         # data passes performed
+    exec_stats: object = None           # dist.ChunkStats when run chunked
 
     def __getitem__(self, k: str) -> float:
         return self.values[k]
@@ -86,7 +88,7 @@ class QualityEvaluator:
                 counts = _counts_jnp(planes, program, n_counters)
             regs = {}
             if sketch_specs:
-                valid = planes[:, 3] != 0  # any flag bit ⇒ real row
+                valid = planes[:, COL_S_FLAGS] != 0  # any flag bit ⇒ real row
                 for sname, cols in sketch_specs:
                     if backend == "pallas":
                         from ..kernels.hll import ops as hops
@@ -112,7 +114,7 @@ class QualityEvaluator:
             return counts, regs
 
         shard_rows = P(axes)  # rows split over every axis (pure DP)
-        mapped = jax.shard_map(
+        mapped = compat.shard_map(
             dist_pass, mesh=mesh,
             in_specs=(shard_rows,),
             out_specs=(P(), {s: P() for s, _ in sketch_specs}),
@@ -140,63 +142,85 @@ class QualityEvaluator:
 
     # -- public API ------------------------------------------------------------
     def assess(self, tensor: TripleTensor) -> AssessmentResult:
-        arr = self.device_planes(tensor)
-        values: dict[str, float] = {}
-        counts_out: dict[str, dict[str, int]] = {}
-        sk_est: dict[str, float] = {}
-        passes = 0
-        for pln, fn in zip(self.plans, self._pass_fns):
-            counts, regs = fn(arr)
-            passes += 1
-            counts = np.asarray(counts)
-            est = {"sketch:" + k: float(hll.hll_estimate(v))
-                   for k, v in regs.items()}
-            sk_est.update(est)
-            values.update(pln.finalize(counts, est))
-            for m in pln.metrics:
-                counts_out[m.name] = {
-                    cname: int(counts[pln.slots[m.name][cname]])
-                    for cname, _ in m.counters}
-        return AssessmentResult(values=values, counts=counts_out,
-                                sketch_estimates=sk_est,
-                                n_triples=len(tensor), passes=passes)
+        """Single-shot assessment.
+
+        Backward-compat shim over the shared execution path the
+        ``repro.qa`` pipeline uses. Prefer ``repro.qa.pipeline()`` /
+        ``repro.qa.assess`` for new code (they add ingest, chunked
+        execution, and checkpoint/resume).
+        """
+        return run_single_shot(self, tensor)
 
     # -- mergeable chunk interface (fault tolerance / stragglers) -------------
+    def _all_sketch_specs(self) -> tuple:
+        specs: dict[str, tuple[int, ...]] = {}
+        for pln in self.plans:
+            for s, cols in pln.sketch_specs:
+                if specs.get(s, cols) != cols:
+                    raise ValueError(
+                        f"sketch {s!r} defined with conflicting columns "
+                        f"{specs[s]} vs {cols}")
+                specs[s] = cols
+        return tuple(specs.items())
+
     def chunk_state_init(self) -> dict:
-        assert self.fused, "chunked mode uses the fused plan"
-        pln = self.plans[0]
+        """Empty mergeable state: one counter vector per plan + sketches."""
         return {
-            "counts": np.zeros((pln.n_counters,), np.int64),
+            "counts": [np.zeros((pln.n_counters,), np.int64)
+                       for pln in self.plans],
             "sketches": {s: np.zeros((1 << self.hll_p,), np.int32)
-                         for s, _ in pln.sketch_specs},
+                         for s, _ in self._all_sketch_specs()},
             "chunks_done": set(),
         }
 
     def eval_chunk(self, chunk: TripleTensor):
         arr = self.device_planes(chunk)
-        counts, regs = self._pass_fns[0](arr)
-        return (np.asarray(counts, np.int64),
-                {k: np.asarray(v) for k, v in regs.items()})
+        counts_out, regs_out = [], {}
+        for fn in self._pass_fns:
+            counts, regs = fn(arr)
+            counts_out.append(np.asarray(counts, np.int64))
+            regs_out.update({k: np.asarray(v) for k, v in regs.items()})
+        return counts_out, regs_out
 
     @staticmethod
     def merge_chunk(state: dict, chunk_id: int, counts, regs) -> dict:
         """Idempotent merge — re-delivered chunks are ignored."""
         if chunk_id in state["chunks_done"]:
             return state
-        state["counts"] = state["counts"] + counts
+        state["counts"] = [a + b for a, b in zip(state["counts"], counts)]
         for k, v in regs.items():
             state["sketches"][k] = np.maximum(state["sketches"][k], v)
         state["chunks_done"].add(chunk_id)
         return state
 
     def finalize_state(self, state: dict, n_triples: int) -> AssessmentResult:
-        pln = self.plans[0]
         est = {"sketch:" + k: float(hll.hll_estimate(jnp.asarray(v)))
                for k, v in state["sketches"].items()}
-        values = pln.finalize(state["counts"], est)
-        counts_out = {m.name: {c: int(state["counts"][pln.slots[m.name][c]])
-                               for c, _ in m.counters}
-                      for m in pln.metrics}
+        values: dict[str, float] = {}
+        counts_out: dict[str, dict[str, int]] = {}
+        for pln, counts in zip(self.plans, state["counts"]):
+            values.update(pln.finalize(counts, est))
+            for m in pln.metrics:
+                counts_out[m.name] = {
+                    c: int(counts[pln.slots[m.name][c]])
+                    for c, _ in m.counters}
         return AssessmentResult(values=values, counts=counts_out,
                                 sketch_estimates=est, n_triples=n_triples,
-                                passes=len(state["chunks_done"]))
+                                passes=len(state["chunks_done"])
+                                * len(self.plans))
+
+
+def run_single_shot(evaluator: QualityEvaluator,
+                    tensor: TripleTensor) -> AssessmentResult:
+    """One full-dataset pass per plan (one total when fused) — the
+    single-shot execution path shared by ``QualityEvaluator.assess`` and
+    the ``repro.qa`` pipeline.
+
+    Expressed as a 1-chunk run through the mergeable-chunk interface, so
+    single-shot and chunked execution share one finalize path and cannot
+    drift apart.
+    """
+    state = evaluator.chunk_state_init()
+    counts, regs = evaluator.eval_chunk(tensor)
+    state = QualityEvaluator.merge_chunk(state, 0, counts, regs)
+    return evaluator.finalize_state(state, len(tensor))

@@ -86,9 +86,92 @@ def _safe_ratio(num: float, den: float) -> float:
 REGISTRY: dict[str, Metric] = {}
 
 
-def register(m: Metric) -> Metric:
+def register(m: Metric, *, overwrite: bool = False) -> Metric:
+    """Add a metric to the global registry (usable as a decorator on
+    functions returning a ``Metric``).
+
+    Refuses to silently replace an existing metric (in particular the
+    built-ins) — pass ``overwrite=True`` or ``unregister`` first.
+    """
+    if callable(m) and not isinstance(m, Metric):
+        return register(m(), overwrite=overwrite)
+    existing = REGISTRY.get(m.name)
+    if existing is not None and existing is not m and not overwrite:
+        raise ValueError(
+            f"metric {m.name!r} is already registered with a different "
+            f"definition; unregister it first, rename yours, or pass "
+            f"overwrite=True")
     REGISTRY[m.name] = m
     return m
+
+
+def unregister(name: str) -> None:
+    """Remove a user-registered metric (tests, experiments)."""
+    REGISTRY.pop(name, None)
+
+
+# --- LQML-style declarative builders (Debattista's LQML DSL, as Python) ------
+# A user metric is declared from Expr predicates alone — no Metric(...)
+# boilerplate — and composes into the fused planner like any built-in
+# (shared counters such as count(valid triples) are deduplicated).
+
+def _as_counters(spec) -> tuple[tuple[str, Expr], ...]:
+    return tuple(spec.items()) if isinstance(spec, Mapping) else tuple(spec)
+
+
+def ratio_metric(name: str, num: Expr, den: Expr | None = None, *,
+                 dimension: str = "custom", description: str = "",
+                 auto_register: bool = True) -> Metric:
+    """``count(num) / count(den)``; ``den`` defaults to all valid triples
+    (sharing the planner slot every built-in ratio metric uses)."""
+    m = Metric(
+        name=name, dimension=dimension,
+        description=description or f"ratio of {name} triples",
+        counters=(("num", num),
+                  ("den", den if den is not None else valid_triple())),
+        finalize=lambda c: _safe_ratio(c["num"], c["den"]))
+    return register(m) if auto_register else m
+
+
+def exists_metric(name: str, cond: Expr, *, dimension: str = "custom",
+                  description: str = "",
+                  auto_register: bool = True) -> Metric:
+    """1.0 iff at least one triple satisfies ``cond`` (paper's L1/L2 form)."""
+    m = Metric(name=name, dimension=dimension,
+               description=description or f"existence of {name} triples",
+               counters=(("hit", cond),), finalize=_exists)
+    return register(m) if auto_register else m
+
+
+def count_metric(name: str, cond: Expr, *, dimension: str = "custom",
+                 description: str = "",
+                 auto_register: bool = True) -> Metric:
+    """Raw count of triples satisfying ``cond`` (paper's SV3 form)."""
+    m = Metric(name=name, dimension=dimension,
+               description=description or f"count of {name} triples",
+               counters=(("hit", cond),),
+               finalize=lambda c: float(c["hit"]))
+    return register(m) if auto_register else m
+
+
+def qap_metric(name: str, counters, *, dimension: str = "custom",
+               description: str = "", sketches=()):
+    """Decorator form for arbitrary QAPs: declare named counters, write
+    the arithmetic finalize as the decorated function::
+
+        @qap_metric("PCT_SELF", {"self": EqPlanes(COL_S, COL_O),
+                                 "total": valid_triple()})
+        def pct_self(c):
+            return c["self"] / max(c["total"], 1)
+    """
+    def deco(fn) -> Metric:
+        doc_lines = (fn.__doc__ or "").strip().splitlines() or [name]
+        m = Metric(name=name, dimension=dimension,
+                   description=description or doc_lines[0],
+                   counters=_as_counters(counters), finalize=fn,
+                   sketches=tuple(sketches))
+        return register(m)
+    return deco
 
 
 # --- Paper Table 2 metrics ---------------------------------------------------

@@ -17,12 +17,22 @@ DQV = "http://www.w3.org/ns/dqv#"
 SDMX = "http://purl.org/linked-data/sdmx/2009/measure#"
 
 
+class _UnknownMetric:
+    dimension = "custom"
+    description = "(metric no longer registered)"
+
+
+_UNKNOWN_METRIC = _UnknownMetric()
+
+
 def to_dqv(result: AssessmentResult, dataset_uri: str = "urn:repro:dataset",
            computed_on: str | None = None) -> dict:
     ts = computed_on or datetime.datetime.now(datetime.timezone.utc).isoformat()
     measurements = []
     for name, value in sorted(result.values.items()):
-        m = REGISTRY[name]
+        # results may outlive their registry entries (user metrics can be
+        # unregistered after assessment) — degrade gracefully
+        m = REGISTRY.get(name) or _UNKNOWN_METRIC
         measurements.append({
             "@type": DQV + "QualityMeasurement",
             DQV + "computedOn": {"@id": dataset_uri},

@@ -1,0 +1,255 @@
+"""repro.dist — the execution subsystem beneath ``repro.qa``.
+
+The paper's Spark deployment gets three things for free from the RDD
+runtime: over-decomposition into tasks, speculative/retried execution of
+failed tasks, and lineage-based recovery. This package supplies the same
+properties for the JAX engine:
+
+* ``ChunkScheduler`` — over-decomposes the main dataset into chunks, runs
+  ``QualityEvaluator.eval_chunk`` per chunk with bounded retries, merges
+  idempotently (duplicate deliveries are ignored), and checkpoints the
+  merged state so a crashed coordinator resumes without re-scanning
+  completed chunks.
+* ``FaultInjector`` / ``WorkerFailure`` — deterministic failure injection
+  (flaky workers, stragglers, coordinator crashes) for tests and drills.
+* ``compressed_psum`` — quantized cross-device mean-reduction with error
+  feedback, for bandwidth-bound reductions.
+* ``sharding`` — ``ShardingPolicy`` / ``split_params`` (logical parameter
+  axes → mesh shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from .sharding import ShardingPolicy, split_params
+
+
+class WorkerFailure(RuntimeError):
+    """A worker task or coordinator failed (injected or real)."""
+
+
+def _fingerprint(planes) -> str:
+    """Cheap content digest of a plane tensor: shape + up to 64 evenly
+    sampled rows. Distinguishes same-size datasets on resume without
+    hashing the full data."""
+    import hashlib
+    h = hashlib.blake2s(repr(planes.shape).encode())
+    step = max(1, planes.shape[0] // 64)
+    h.update(np.ascontiguousarray(planes[::step]).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault injection for the chunk scheduler.
+
+    ``fail_chunks``: chunk id → number of attempts that fail before one
+    succeeds (a flaky worker). ``slow_chunks``: chunk id → extra seconds
+    (a straggler). ``crash_after_merges``: coordinator dies once this many
+    chunks have been merged (tests checkpoint/resume).
+    """
+    fail_chunks: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    slow_chunks: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    crash_after_merges: Optional[int] = None
+
+    def __post_init__(self):
+        self._fails_left = dict(self.fail_chunks)
+
+    def on_eval(self, chunk_id: int) -> None:
+        delay = self.slow_chunks.get(chunk_id, 0.0)
+        if delay:
+            time.sleep(delay)
+        left = self._fails_left.get(chunk_id, 0)
+        if left > 0:
+            self._fails_left[chunk_id] = left - 1
+            raise WorkerFailure(
+                f"injected worker failure on chunk {chunk_id} "
+                f"({left - 1} more to come)")
+
+    def on_merge(self, merges_done: int) -> None:
+        if (self.crash_after_merges is not None
+                and merges_done >= self.crash_after_merges):
+            raise WorkerFailure(
+                f"injected coordinator crash after {merges_done} merges")
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    chunks_total: int
+    attempts: int = 0            # eval attempts in THIS run (incl. retries)
+    retries: int = 0
+    resumed_from: Optional[int] = None  # merge count at the restored ckpt
+    checkpoints_written: int = 0
+
+
+class ChunkScheduler:
+    """Fault-tolerant chunked execution of a quality assessment.
+
+    Built on the evaluator's mergeable-chunk interface
+    (``eval_chunk``/``merge_chunk``/``finalize_state``): chunk results are
+    commutative monoid elements (counter sums + HLL register max), so any
+    arrival order, duplicate delivery, or restart yields bit-identical
+    results to a single-shot pass.
+    """
+
+    def __init__(self, evaluator, n_chunks: int = 16, *,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 8, max_attempts: int = 4):
+        self.evaluator = evaluator
+        self.n_chunks = n_chunks
+        self.checkpoint_every = checkpoint_every
+        self.max_attempts = max_attempts
+        self._mgr = (CheckpointManager(checkpoint_dir, keep=2)
+                     if checkpoint_dir else None)
+        self._dataset_sig: Optional[tuple] = None  # set per run()
+        self._chunk_sizes: dict[int, int] = {}   # cid -> n_valid when merged
+
+    # -- checkpoint plumbing ---------------------------------------------------
+    def _compat_meta(self) -> dict:
+        ev = self.evaluator
+        return {"n_chunks": self.n_chunks,
+                "metrics": [m.name for m in ev.metrics],
+                "n_plans": len(ev.plans),
+                "hll_p": ev.hll_p,
+                # dataset identity (size + content digest; None for
+                # unsized streams) — a checkpoint from a different
+                # dataset must not resume
+                "dataset": (list(self._dataset_sig)
+                            if self._dataset_sig else None)}
+
+    def _restore(self, state: dict) -> tuple[dict, Optional[int]]:
+        if self._mgr is None:
+            return state, None
+        step = self._mgr.latest_step()
+        if step is None:
+            return state, None
+        meta = self._mgr.manifest(step)["metadata"]
+        want = self._compat_meta()
+        mismatched = {k: (meta.get(k), v) for k, v in want.items()
+                      if meta.get(k) != v}
+        if mismatched:
+            # chunk ids from an incompatible run denote different data
+            # slices — resuming would silently corrupt the result
+            raise ValueError(
+                f"checkpoint at step {step} is incompatible with this "
+                f"scheduler (saved vs current): {mismatched}; use a fresh "
+                f"checkpoint_dir or matching n_chunks/metrics")
+        template = {"counts": state["counts"], "sketches": state["sketches"]}
+        restored = self._mgr.restore(step, template)
+        done = meta["chunks_done"]
+        self._chunk_sizes = dict(zip(done, meta.get("chunk_sizes", [])))
+        return ({"counts": restored["counts"],
+                 "sketches": restored["sketches"],
+                 "chunks_done": set(done)}, step)
+
+    def _save(self, merges: int, state: dict) -> None:
+        done = sorted(state["chunks_done"])
+        self._mgr.save(
+            merges,
+            {"counts": state["counts"], "sketches": state["sketches"]},
+            metadata={"chunks_done": done,
+                      "chunk_sizes": [self._chunk_sizes.get(c) for c in done],
+                      **self._compat_meta()})
+
+    # -- execution -------------------------------------------------------------
+    def run(self, dataset, *, faults: Optional[FaultInjector] = None):
+        """Assess ``dataset`` chunk by chunk; returns (result, ChunkStats).
+
+        ``dataset``: a ``TripleTensor`` (split into ``n_chunks`` here) or an
+        already-chunked sequence of ``TripleTensor``s (streaming ingest).
+        """
+        ev = self.evaluator
+        if hasattr(dataset, "chunks"):
+            chunks: Iterable = dataset.chunks(self.n_chunks)
+            chunks_total = self.n_chunks
+            self._dataset_sig = (len(dataset), _fingerprint(dataset.planes))
+        else:
+            chunks = dataset  # streaming: consumed lazily, one chunk resident
+            chunks_total = 0  # counted as the stream drains
+            self._dataset_sig = None
+
+        state = ev.chunk_state_init()
+        state, resumed = self._restore(state)
+        stats = ChunkStats(chunks_total=chunks_total, resumed_from=resumed)
+
+        n_triples = 0
+        last_saved = len(state["chunks_done"])
+        for cid, chunk in enumerate(chunks):
+            stats.chunks_total = max(stats.chunks_total, cid + 1)
+            n_triples += len(chunk)
+            if cid in state["chunks_done"]:
+                # already merged before a restart — but only if it is the
+                # SAME chunk; a differently-split stream must not resume
+                expected = self._chunk_sizes.get(cid)
+                if expected is not None and expected != len(chunk):
+                    raise ValueError(
+                        f"chunk {cid} has {len(chunk)} triples but the "
+                        f"checkpoint recorded {expected}; the dataset is "
+                        f"chunked differently — use a fresh checkpoint_dir")
+                continue
+            self._chunk_sizes[cid] = len(chunk)
+            counts = regs = None
+            for attempt in range(self.max_attempts):
+                try:
+                    stats.attempts += 1
+                    if faults is not None:
+                        faults.on_eval(cid)
+                    counts, regs = ev.eval_chunk(chunk)
+                    break
+                except WorkerFailure:
+                    stats.retries += 1
+                    if attempt == self.max_attempts - 1:
+                        raise
+            state = ev.merge_chunk(state, cid, counts, regs)
+            merges = len(state["chunks_done"])
+            if (self._mgr is not None and self.checkpoint_every
+                    and merges % self.checkpoint_every == 0):
+                self._save(merges, state)
+                stats.checkpoints_written += 1
+                last_saved = merges
+            if faults is not None:
+                faults.on_merge(merges)
+
+        merges = len(state["chunks_done"])
+        if self._mgr is not None and merges > last_saved:
+            # final checkpoint: a completed run always persists its state,
+            # even when n_chunks never aligned with checkpoint_every
+            self._save(merges, state)
+            stats.checkpoints_written += 1
+
+        return ev.finalize_state(state, n_triples), stats
+
+
+# --- compressed collectives ---------------------------------------------------
+
+def compressed_psum(x, axis_name: str, error, *, bits: int = 8):
+    """Quantized mean-``psum`` with error feedback.
+
+    Each shard adds its carried quantization ``error`` to ``x``, quantizes
+    to ``bits`` bits (symmetric, per-shard scale), reduces the decoded
+    values, and returns ``(mean, new_error)``. The residual is fed back on
+    the next call, so repeated reductions are unbiased (error-feedback SGD
+    compression); a one-off call is accurate to ~``2^-(bits-1)`` relative.
+    """
+    compensated = x + error
+    qmax = float((1 << (bits - 1)) - 1)
+    scale = jnp.max(jnp.abs(compensated)) / qmax
+    scale = jnp.maximum(scale, jnp.asarray(jnp.finfo(x.dtype).tiny, x.dtype))
+    q = jnp.clip(jnp.round(compensated / scale), -qmax, qmax)
+    decoded = (q * scale).astype(x.dtype)
+    new_error = compensated - decoded
+    n = jax.lax.psum(jnp.ones((), x.dtype), axis_name)
+    return jax.lax.psum(decoded, axis_name) / n, new_error
+
+
+__all__ = [
+    "ChunkScheduler", "ChunkStats", "FaultInjector", "WorkerFailure",
+    "compressed_psum", "ShardingPolicy", "split_params",
+]

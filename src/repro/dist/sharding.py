@@ -1,0 +1,141 @@
+"""Sharding policy: logical parameter axes → mesh ``PartitionSpec``s.
+
+Models annotate every parameter with a tuple of *logical* axis names
+(``("embed", "q_heads", None)``); the policy maps those names onto the
+physical mesh axes:
+
+* tensor-parallel names (``q_heads``, ``mlp``, ``vocab``, …) → the
+  ``"model"`` mesh axis,
+* ``embed``/``table_rows`` → the ``"data"`` axis when FSDP is on
+  (weights sharded over data-parallel workers, gathered on use),
+* ``batch`` → all data axes grouped (optionally *all* axes, for pure
+  data-parallel workloads like GNNs and quality assessment),
+* anything else (or a non-divisible dimension) → replicated.
+
+A mesh axis is never used twice within one spec; first matching
+dimension wins, later ones fall back to replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Logical names that shard over the tensor-parallel ("model") axis.
+MODEL_AXES = frozenset({
+    "model", "mlp", "moe_mlp", "q_heads", "kv_heads", "heads", "vocab",
+    "experts",
+})
+# Logical names that shard over the data axis under FSDP.
+FSDP_AXES = frozenset({"embed", "table_rows"})
+
+
+def _is_logical_axes(x: Any) -> bool:
+    """A logical-axes annotation: tuple of str-or-None (possibly empty)."""
+    return (isinstance(x, tuple)
+            and all(a is None or isinstance(a, str) for a in x))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh_axes: tuple[str, ...]
+    fsdp: bool = False
+    batch_over_all: bool = False
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        """Axes used for batch/data parallelism."""
+        if self.batch_over_all:
+            return tuple(self.mesh_axes)
+        return tuple(a for a in self.mesh_axes if a != "model")
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        return "model" if "model" in self.mesh_axes else None
+
+    def _fsdp_axis(self) -> Optional[str]:
+        if not self.fsdp:
+            return None
+        da = self.data_axes
+        if not da:
+            return None
+        return "data" if "data" in da else da[-1]
+
+    def spec_for(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None,
+                 axis_sizes: Optional[dict[str, int]] = None) -> P:
+        """PartitionSpec for one parameter.
+
+        With ``shape`` and ``axis_sizes`` given, any dimension that does not
+        divide evenly over its target mesh axes falls back to replication
+        (odd head counts, vocab remainders, …).
+        """
+        entries: list = []
+        used: set[str] = set()
+        for i, name in enumerate(logical):
+            cand: Any = None
+            if name == "batch":
+                group = tuple(a for a in self.data_axes if a not in used)
+                cand = group if group else None
+            elif name in MODEL_AXES:
+                cand = self.model_axis
+            elif name in FSDP_AXES:
+                cand = self._fsdp_axis()
+            if cand is not None:
+                group = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used for a in group):
+                    cand = None
+                elif shape is not None and axis_sizes is not None:
+                    n = int(np.prod([axis_sizes[a] for a in group]))
+                    if n == 0 or shape[i] % n != 0:
+                        cand = None
+            if cand is not None:
+                group = cand if isinstance(cand, tuple) else (cand,)
+                used.update(group)
+            entries.append(cand)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def shardings_for_tree(self, mesh, logical, shapes=None):
+        """Map a logical-axes pytree to ``NamedSharding``s on ``mesh``.
+
+        ``shapes`` (optional): a matching pytree of arrays or
+        ``ShapeDtypeStruct``s enabling the divisibility fallback.
+        """
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        l_leaves, treedef = jax.tree_util.tree_flatten(
+            logical, is_leaf=_is_logical_axes)
+        if shapes is None:
+            s_leaves: list = [None] * len(l_leaves)
+        else:
+            s_leaves = jax.tree_util.tree_leaves(shapes)
+            assert len(s_leaves) == len(l_leaves), (
+                "logical/shapes tree mismatch", len(l_leaves), len(s_leaves))
+        out = []
+        for ll, s in zip(l_leaves, s_leaves):
+            shape = getattr(s, "shape", None)
+            out.append(NamedSharding(
+                mesh, self.spec_for(ll, shape,
+                                    axis_sizes if shape is not None else None)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def split_params(tree):
+    """Split a pytree of ``(array, logical_axes)`` leaves into two trees.
+
+    Models build one tree carrying both the parameter (or its abstract
+    ``ShapeDtypeStruct``) and its logical-axes annotation; this separates
+    them into structurally identical ``(params, logical)`` trees.
+    """
+    def is_leaf(x):
+        return (isinstance(x, tuple) and len(x) == 2
+                and _is_logical_axes(x[1]) and not _is_logical_axes(x))
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_leaf)
+    params = jax.tree_util.tree_unflatten(treedef, [l[0] for l in leaves])
+    logical = jax.tree_util.tree_unflatten(treedef, [l[1] for l in leaves])
+    return params, logical

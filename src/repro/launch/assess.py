@@ -1,5 +1,7 @@
 """Quality-assessment launcher (the paper's workflow as a CLI).
 
+A thin shell over the ``repro.qa`` pipeline:
+
   PYTHONPATH=src python -m repro.launch.assess --nt data.nt --base http://ex/
   PYTHONPATH=src python -m repro.launch.assess --synthetic 1000000 \\
       --chunks 32 --checkpoint-dir ckpt/ --backend pallas
@@ -7,7 +9,6 @@
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -30,38 +31,37 @@ def main():
     ap.add_argument("--dqv", action="store_true", help="emit DQV JSON-LD")
     args = ap.parse_args()
 
-    from repro.core import (ALL_METRICS, PAPER_METRICS, QualityEvaluator,
-                            report)
-    from repro.dist import ChunkScheduler
-    from repro.rdf import encode_ntriples, synth_encoded
+    from repro import qa
+    from repro.core import report
+    from repro.rdf import synth_encoded
 
-    names = {"all": ALL_METRICS, "paper": PAPER_METRICS}.get(
-        args.metrics, tuple(args.metrics.split(",")))
+    pipe = qa.pipeline().metrics(args.metrics).backend(args.backend)
+    if args.no_fused:
+        pipe = pipe.per_metric()
+    if args.chunks:
+        pipe = pipe.chunked(args.chunks, checkpoint_dir=args.checkpoint_dir)
+    if args.base:
+        pipe = pipe.base(*args.base)
 
     t0 = time.time()
     if args.synthetic:
-        tt = synth_encoded(args.synthetic, seed=0)
+        source = synth_encoded(args.synthetic, seed=0)
     elif args.nt:
-        with open(args.nt) as f:
-            tt = encode_ntriples(f.read(), base_namespaces=args.base)
+        source = pipe.ingest(args.nt)  # parse+encode timed as ingest
     else:
         ap.error("need --nt or --synthetic")
     t_ingest = time.time() - t0
 
-    ev = QualityEvaluator(names, fused=not args.no_fused,
-                          backend=args.backend)
+    print(f"# {pipe.describe()}", file=sys.stderr)
     t0 = time.time()
-    if args.chunks:
-        sched = ChunkScheduler(ev, n_chunks=args.chunks,
-                               checkpoint_dir=args.checkpoint_dir)
-        res, stats = sched.run(tt)
-        print(f"# chunks={stats.chunks_total} attempts={stats.attempts} "
-              f"resumed_from={stats.resumed_from}", file=sys.stderr)
-    else:
-        res = ev.assess(tt)
+    res = pipe.run(source)
     t_eval = time.time() - t0
 
-    print(f"# {len(tt):,} triples | ingest {t_ingest:.2f}s | "
+    if res.exec_stats is not None:
+        s = res.exec_stats
+        print(f"# chunks={s.chunks_total} attempts={s.attempts} "
+              f"resumed_from={s.resumed_from}", file=sys.stderr)
+    print(f"# {res.n_triples:,} triples | prep {t_ingest:.2f}s | "
           f"eval {t_eval:.2f}s | {res.passes} pass(es)", file=sys.stderr)
     if args.dqv:
         print(report.to_json(res))

@@ -1,0 +1,40 @@
+"""repro.qa — the public quality-assessment API (one front door).
+
+Fluent form::
+
+    from repro import qa
+    res = (qa.pipeline().metrics("paper").backend("pallas")
+             .chunked(32, checkpoint_dir="ckpt/").run("data.nt"))
+
+One-call form::
+
+    res = qa.assess(dataset, metrics="paper", chunks=8)
+
+Custom metrics (LQML-style declarative builders, fused with built-ins)::
+
+    from repro.qa import ratio_metric, is_literal
+    ratio_metric("LIT", num=is_literal("o"))
+    qa.assess(dataset, metrics="paper,LIT")
+
+Everything beneath this module — the ``QualityEvaluator`` engine, the
+``repro.dist`` scheduler, backends, meshes — is an execution detail the
+pipeline owns.
+"""
+from ..core.evaluator import AssessmentResult, QualityEvaluator
+from ..core.metrics import (Metric, register, unregister, ratio_metric,
+                            exists_metric, count_metric, qap_metric,
+                            is_uri, is_literal, is_blank, is_internal,
+                            is_external, has_flag, res_too_long,
+                            valid_triple)
+from .pipeline import (BACKENDS, Dataset, ExecutionConfig, Pipeline, assess,
+                       pipeline, run_single_shot)
+
+__all__ = [
+    "AssessmentResult", "QualityEvaluator",
+    "Metric", "register", "unregister",
+    "ratio_metric", "exists_metric", "count_metric", "qap_metric",
+    "is_uri", "is_literal", "is_blank", "is_internal", "is_external",
+    "has_flag", "res_too_long", "valid_triple",
+    "BACKENDS", "Dataset", "ExecutionConfig", "Pipeline",
+    "assess", "pipeline", "run_single_shot",
+]

@@ -1,0 +1,266 @@
+"""The ``repro.qa`` pipeline — one front door for quality assessment.
+
+The paper exposes quality assessment as a single scalable operation over a
+cluster; this module is that operation's API surface. A ``Pipeline`` is an
+immutable description of *what* to measure (metric names) and *how* to
+execute (backend, fusion, mesh sharding, chunking + checkpointing); every
+fluent method returns a new pipeline, so partial configurations can be
+shared and specialized freely::
+
+    base = qa.pipeline().metrics("paper").backend("pallas")
+    res = base.chunked(32, checkpoint_dir="ckpt/").run("data.nt")
+
+Datasets are ingested polymorphically: a ``TripleTensor``, an N-Triples
+file path, raw N-Triples text, or an iterable of chunks (each itself a
+``TripleTensor`` or N-Triples text) for streaming ingest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Iterable, Optional, Sequence, Union
+
+from ..core.evaluator import (AssessmentResult, QualityEvaluator,
+                              run_single_shot)
+from ..core.metrics import (ALL_METRICS, EXTENDED_METRICS, PAPER_METRICS,
+                            SKETCH_METRICS, REGISTRY, Metric, register)
+from ..core import sketches as hll
+from ..dist import ChunkScheduler
+from ..rdf import TripleTensor, encode_ntriples
+
+BACKENDS = ("jnp", "pallas")
+
+METRIC_ALIASES = {
+    "paper": PAPER_METRICS,
+    "extended": EXTENDED_METRICS,
+    "sketch": SKETCH_METRICS,
+}
+
+Dataset = Union[TripleTensor, str, os.PathLike, Iterable]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How an assessment executes; owned by the pipeline, consumed by the
+    evaluator engine and the ``repro.dist`` scheduler."""
+    backend: str = "jnp"
+    fused: bool = True
+    mesh: Any = None
+    chunks: int = 0                    # 0 = single shot
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 8
+    interpret: bool = True             # pallas interpret mode (CPU hosts)
+    hll_p: int = hll.DEFAULT_P
+
+    def __post_init__(self):
+        # validate here so every construction path (fluent, qa.assess
+        # overrides, direct ExecutionConfig) rejects typos loudly instead
+        # of silently falling back to the jnp branch
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.chunks < 0:
+            raise ValueError(f"chunks must be >= 0, got {self.chunks}")
+
+
+def _resolve_metrics(spec) -> tuple[str, ...]:
+    if isinstance(spec, str):
+        names: list[str] = []
+        for tok in (s.strip() for s in spec.split(",")):
+            if tok == "all":
+                # resolved against the live registry so user-registered
+                # metrics are included
+                names.extend(REGISTRY)
+            elif tok in METRIC_ALIASES:
+                names.extend(METRIC_ALIASES[tok])
+            elif tok:
+                names.append(tok)
+    else:
+        names = []
+        for m in spec:
+            if isinstance(m, Metric):
+                if REGISTRY.get(m.name) is not m:
+                    register(m)  # raises on collision, never clobbers
+                names.append(m.name)
+            else:
+                names.append(m)
+    names = list(dict.fromkeys(names))  # dedupe, keep order
+    if not names:
+        raise ValueError("no metrics selected")
+    unknown = [n for n in names if n not in REGISTRY]
+    if unknown:
+        raise ValueError(
+            f"unknown metrics {unknown}; registered: {sorted(REGISTRY)}")
+    return tuple(names)
+
+
+@functools.lru_cache(maxsize=16)
+def _evaluator_for(metrics_key: tuple, backend: str, fused: bool, mesh: Any,
+                   hll_p: int, interpret: bool) -> QualityEvaluator:
+    # keyed on the Metric OBJECTS (not names), so re-registering a name
+    # yields a fresh engine rather than a stale cached plan, and ONLY on
+    # the engine-relevant exec fields — scheduler-only settings (chunks,
+    # checkpoint_dir, ...) must not defeat jit reuse
+    return QualityEvaluator([m.name for m in metrics_key], fused=fused,
+                            backend=backend, mesh=mesh, hll_p=hll_p,
+                            interpret=interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """Immutable, fluent assessment pipeline. Build with ``qa.pipeline()``."""
+    metric_names: tuple[str, ...] = ALL_METRICS
+    exec: ExecutionConfig = ExecutionConfig()
+    base_ns: tuple[str, ...] = ()
+
+    # -- what to measure -------------------------------------------------------
+    def metrics(self, spec) -> "Pipeline":
+        """Select metrics: ``"paper"``/``"all"``/``"extended"``/``"sketch"``,
+        a csv string, or a sequence of names/``Metric``s."""
+        return dataclasses.replace(self, metric_names=_resolve_metrics(spec))
+
+    def base(self, *namespaces: str) -> "Pipeline":
+        """Internal base namespaces used when ingesting N-Triples text."""
+        return dataclasses.replace(self, base_ns=tuple(namespaces))
+
+    # -- how to execute --------------------------------------------------------
+    def _exec(self, **kw) -> "Pipeline":
+        return dataclasses.replace(
+            self, exec=dataclasses.replace(self.exec, **kw))
+
+    def backend(self, name: str) -> "Pipeline":
+        return self._exec(backend=name)  # validated by ExecutionConfig
+
+    def fused(self, flag: bool = True) -> "Pipeline":
+        return self._exec(fused=flag)
+
+    def per_metric(self) -> "Pipeline":
+        """Paper-faithful Algorithm 1: one pass per metric."""
+        return self._exec(fused=False)
+
+    def shard(self, mesh) -> "Pipeline":
+        """Shard rows over all axes of ``mesh`` (pure data parallelism)."""
+        return self._exec(mesh=mesh)
+
+    def chunked(self, n_chunks: int, *, checkpoint_dir: Optional[str] = None,
+                checkpoint_every: int = 8) -> "Pipeline":
+        """Fault-tolerant over-decomposed scan via ``dist.ChunkScheduler``."""
+        return self._exec(chunks=int(n_chunks), checkpoint_dir=checkpoint_dir,
+                          checkpoint_every=checkpoint_every)
+
+    def single_shot(self) -> "Pipeline":
+        return self._exec(chunks=0, checkpoint_dir=None)
+
+    def interpret(self, flag: bool) -> "Pipeline":
+        return self._exec(interpret=flag)
+
+    def hll(self, p: int) -> "Pipeline":
+        return self._exec(hll_p=p)
+
+    def with_exec(self, cfg: ExecutionConfig) -> "Pipeline":
+        return dataclasses.replace(self, exec=cfg)
+
+    # -- execution -------------------------------------------------------------
+    def evaluator(self) -> QualityEvaluator:
+        """The configured engine beneath this pipeline. Memoized on the
+        resolved Metric objects + execution config, so reusing one frozen
+        pipeline across many ``run()`` calls reuses the jitted pass
+        functions instead of re-planning and re-compiling each time."""
+        metrics_key = tuple(REGISTRY[n] for n in self.metric_names)
+        e = self.exec
+        return _evaluator_for(metrics_key, e.backend, e.fused, e.mesh,
+                              e.hll_p, e.interpret)
+
+    def run(self, dataset: Dataset) -> AssessmentResult:
+        """Ingest ``dataset`` and execute; chunked/streaming runs attach a
+        ``dist.ChunkStats`` on ``result.exec_stats``."""
+        data = self.ingest(dataset)
+        if isinstance(data, TripleTensor) and not self.exec.chunks:
+            return run_single_shot(self.evaluator(), data)
+        result, stats = self.scheduler().run(data)
+        result.exec_stats = stats
+        return result
+
+    def scheduler(self) -> ChunkScheduler:
+        """The configured ``dist.ChunkScheduler`` (advanced: fault injection,
+        custom chunk streams)."""
+        return ChunkScheduler(self.evaluator(),
+                              n_chunks=self.exec.chunks or 16,
+                              checkpoint_dir=self.exec.checkpoint_dir,
+                              checkpoint_every=self.exec.checkpoint_every)
+
+    # -- ingest ----------------------------------------------------------------
+    def _encode(self, text: str) -> TripleTensor:
+        return encode_ntriples(text, base_namespaces=self.base_ns)
+
+    @staticmethod
+    def _looks_like_ntriples(text: str) -> bool:
+        """N-Triples content, as opposed to a (possibly mistyped) path:
+        multi-line, or a single statement-shaped line. A bare missing path
+        never matches, so it raises instead of parsing to 0 triples."""
+        if "\n" in text:
+            return True
+        t = text.strip()
+        return t.startswith(("<", "_:", "#")) and t.endswith(".")
+
+    def _ingest_one(self, item) -> TripleTensor:
+        if isinstance(item, TripleTensor):
+            return item
+        if isinstance(item, os.PathLike):
+            with open(os.fspath(item)) as f:
+                return self._encode(f.read())
+        if isinstance(item, str):
+            if ("\n" not in item and len(item) < 4096
+                    and os.path.exists(item)):
+                with open(item) as f:
+                    return self._encode(f.read())
+            if self._looks_like_ntriples(item):
+                return self._encode(item)
+            raise FileNotFoundError(f"no such N-Triples file: {item!r}")
+        raise TypeError(f"cannot ingest {type(item).__name__} as a dataset")
+
+    def ingest(self, dataset: Dataset):
+        """Encode without assessing: → a ``TripleTensor``, or a lazy
+        stream of chunk tensors. Useful to time or reuse ingestion
+        separately from evaluation."""
+        if isinstance(dataset, (TripleTensor, str, os.PathLike)):
+            return self._ingest_one(dataset)
+        if hasattr(dataset, "__iter__"):
+            # generator: one encoded chunk resident at a time
+            return (self._ingest_one(c) for c in dataset)
+        raise TypeError(f"cannot ingest {type(dataset).__name__} as a dataset")
+
+    # -- introspection ---------------------------------------------------------
+    def describe(self) -> str:
+        e = self.exec
+        mode = (f"chunked×{e.chunks}" if e.chunks else "single-shot")
+        if e.checkpoint_dir:
+            mode += f" ckpt={e.checkpoint_dir}"
+        mesh = (f" mesh={tuple(e.mesh.axis_names)}" if e.mesh is not None
+                else "")
+        return (f"qa.Pipeline[{len(self.metric_names)} metrics | "
+                f"{'fused' if e.fused else 'per-metric'} | {e.backend} | "
+                f"{mode}{mesh}]")
+
+    __repr__ = describe
+
+
+def pipeline() -> Pipeline:
+    """A fresh default pipeline (all registered metrics, fused, jnp,
+    single shot)."""
+    return Pipeline(metric_names=tuple(REGISTRY))
+
+
+def assess(dataset: Dataset, *, metrics="all",
+           exec: Optional[ExecutionConfig] = None,
+           base: Sequence[str] = (), **exec_overrides) -> AssessmentResult:
+    """One-call assessment: ``qa.assess(ds, metrics="paper",
+    backend="pallas", chunks=8)``. Keyword overrides patch ``exec``."""
+    cfg = exec if exec is not None else ExecutionConfig()
+    if exec_overrides:
+        cfg = dataclasses.replace(cfg, **exec_overrides)
+    p = pipeline().metrics(metrics).with_exec(cfg)
+    if base:
+        p = p.base(*base)
+    return p.run(dataset)

@@ -2,7 +2,12 @@
 against the pure oracles (interpret=True on CPU; TPU is the target)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property tests skip; deterministic sweeps still run
+    HAVE_HYPOTHESIS = False
 
 import jax.numpy as jnp
 
@@ -41,41 +46,40 @@ def test_qap_count_jnp_oracle_agrees_with_np():
 
 # --- hypothesis: random expression trees --------------------------------------
 
-_plane = st.integers(0, N_PLANES - 1)
-_bit = st.sampled_from([1 << i for i in range(15)])
+if HAVE_HYPOTHESIS:
+    _plane = st.integers(0, N_PLANES - 1)
+    _bit = st.sampled_from([1 << i for i in range(15)])
 
+    def _exprs(depth=3):
+        leaf = st.one_of(
+            st.builds(E.HasBits, _plane, _bit),
+            st.builds(E.AnyBits, _plane, _bit),
+            st.builds(E.Cmp, _plane, st.sampled_from(
+                ["lt", "le", "gt", "ge", "eq", "ne"]), st.integers(-4, 120)),
+            st.builds(E.EqPlanes, _plane, _plane),
+        )
+        return st.recursive(
+            leaf,
+            lambda kids: st.one_of(st.builds(E.And, kids, kids),
+                                   st.builds(E.Or, kids, kids),
+                                   st.builds(E.Not, kids)),
+            max_leaves=8)
 
-def _exprs(depth=3):
-    leaf = st.one_of(
-        st.builds(E.HasBits, _plane, _bit),
-        st.builds(E.AnyBits, _plane, _bit),
-        st.builds(E.Cmp, _plane, st.sampled_from(
-            ["lt", "le", "gt", "ge", "eq", "ne"]), st.integers(-4, 120)),
-        st.builds(E.EqPlanes, _plane, _plane),
-    )
-    return st.recursive(
-        leaf,
-        lambda kids: st.one_of(st.builds(E.And, kids, kids),
-                               st.builds(E.Or, kids, kids),
-                               st.builds(E.Not, kids)),
-        max_leaves=8)
-
-
-@settings(max_examples=30, deadline=None)
-@given(exprs=st.lists(_exprs(), min_size=1, max_size=5),
-       n=st.integers(1, 3000), seed=st.integers(0, 99))
-def test_qap_kernel_random_programs(exprs, n, seed):
-    program = E.compile_program(exprs)
-    assert E.program_stack_depth(program) >= 1
-    tt = synth_encoded(n, seed=seed)
-    planes = jnp.asarray(tt.planes)
-    got = np.asarray(qops.fused_count(planes, program, len(exprs)))
-    want = qref.counts_ref_np(tt.planes, program, len(exprs))
-    np.testing.assert_array_equal(got, want.astype(np.int32))
-    # triangulate with the direct AST path
-    direct = np.asarray(jnp.stack(
-        [jnp.sum(e.to_mask(planes), dtype=jnp.int32) for e in exprs]))
-    np.testing.assert_array_equal(got, direct)
+    @settings(max_examples=30, deadline=None)
+    @given(exprs=st.lists(_exprs(), min_size=1, max_size=5),
+           n=st.integers(1, 3000), seed=st.integers(0, 99))
+    def test_qap_kernel_random_programs(exprs, n, seed):
+        program = E.compile_program(exprs)
+        assert E.program_stack_depth(program) >= 1
+        tt = synth_encoded(n, seed=seed)
+        planes = jnp.asarray(tt.planes)
+        got = np.asarray(qops.fused_count(planes, program, len(exprs)))
+        want = qref.counts_ref_np(tt.planes, program, len(exprs))
+        np.testing.assert_array_equal(got, want.astype(np.int32))
+        # triangulate with the direct AST path
+        direct = np.asarray(jnp.stack(
+            [jnp.sum(e.to_mask(planes), dtype=jnp.int32) for e in exprs]))
+        np.testing.assert_array_equal(got, direct)
 
 
 # --- HLL kernel ----------------------------------------------------------------
@@ -91,9 +95,18 @@ def test_hll_kernel_sweep(n, p, cols):
     np.testing.assert_array_equal(got, want)
 
 
-@settings(max_examples=10, deadline=None)
-@given(true_card=st.integers(100, 50_000))
-def test_hll_estimate_accuracy(true_card):
+if not HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("true_card", [100, 1000, 50_000])
+    def test_hll_estimate_accuracy_fixed(true_card):
+        _check_hll_accuracy(true_card)
+else:
+    @settings(max_examples=10, deadline=None)
+    @given(true_card=st.integers(100, 50_000))
+    def test_hll_estimate_accuracy(true_card):
+        _check_hll_accuracy(true_card)
+
+
+def _check_hll_accuracy(true_card):
     """Estimate within ~5 standard errors (1.04/sqrt(m) per HLL paper)."""
     p = 12
     rng = np.random.default_rng(true_card)

@@ -97,6 +97,30 @@ def test_planner_dedup():
     assert p.stack_depth >= 1
 
 
+def test_planner_shares_valid_triple_counter():
+    """I2/U1/RC1/CN2 all count valid triples; the fused plan must compile
+    that predicate once and point every metric's 'total' slot at it."""
+    from repro.core.metrics import valid_triple
+    names = ("I2", "U1", "RC1", "CN2")
+    p = plan([REGISTRY[m] for m in names])
+    assert sum(e == valid_triple() for e in p.exprs) == 1
+    shared = {p.slots[m]["total"] for m in names}
+    assert len(shared) == 1, "all four metrics must share one slot"
+    assert p.exprs[shared.pop()] == valid_triple()
+
+
+def test_fused_and_per_metric_plans_agree_on_counts():
+    """Raw counter values (not just finalized ratios) must match between
+    the fused multi-metric plan and per-metric plans."""
+    tt = synth_encoded(6000, seed=11)
+    names = ("I2", "U1", "RC1", "CN2")
+    fused = QualityEvaluator(names, fused=True).assess(tt)
+    unfused = QualityEvaluator(names, fused=False).assess(tt)
+    assert fused.passes == 1 and unfused.passes == len(names)
+    assert fused.counts == unfused.counts
+    assert fused.values == unfused.values
+
+
 def test_empty_dataset():
     from repro.rdf import empty
     r = QualityEvaluator(PAPER_METRICS, fused=True).assess(empty(8))

@@ -1,0 +1,258 @@
+"""repro.qa public API: execution-strategy equivalence grid, fluent builder
+semantics, polymorphic ingest, and declarative custom metrics."""
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro import qa
+from repro.core import ALL_METRICS, PAPER_METRICS, QualityEvaluator, plan
+from repro.core import metrics as M
+from repro.rdf import bsbm_ntriples, synth_encoded
+
+N = 10_000
+
+
+@pytest.fixture(scope="module")
+def tensor():
+    return synth_encoded(N, seed=3)
+
+
+@pytest.fixture(scope="module")
+def reference(tensor):
+    return qa.assess(tensor, metrics=ALL_METRICS)  # fused, jnp, single-shot
+
+
+# --- acceptance: every execution strategy yields identical values ------------
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "per-metric"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("chunks", [0, 8], ids=["single-shot", "chunked"])
+def test_execution_grid_identical(tensor, reference, fused, backend, chunks):
+    res = qa.assess(tensor, metrics=ALL_METRICS, fused=fused,
+                    backend=backend, chunks=chunks)
+    assert set(res.values) == set(reference.values)
+    for k, v in reference.values.items():
+        assert res.values[k] == pytest.approx(v, abs=1e-9), k
+    if chunks:
+        assert res.exec_stats is not None
+        assert res.exec_stats.chunks_total == chunks
+    n_plans = 1 if fused else len(ALL_METRICS)
+    assert res.passes == (chunks or 1) * n_plans
+
+
+def test_chunked_checkpointing_writes_state(tensor):
+    with tempfile.TemporaryDirectory() as d:
+        res = qa.assess(tensor, metrics="paper", chunks=8,
+                        checkpoint_dir=d, checkpoint_every=4)
+        assert res.exec_stats.checkpoints_written >= 1
+        assert any(n.startswith("step_") for n in os.listdir(d))
+
+
+def test_completed_run_always_checkpoints(tensor):
+    """Even when n_chunks never aligns with checkpoint_every, a completed
+    run must persist its final state (else checkpointing silently no-ops
+    and a re-run rescans everything)."""
+    with tempfile.TemporaryDirectory() as d:
+        res = qa.assess(tensor, metrics="paper", chunks=6,
+                        checkpoint_dir=d)  # default checkpoint_every=8 > 6
+        assert res.exec_stats.checkpoints_written == 1
+        res2 = qa.assess(tensor, metrics="paper", chunks=6,
+                         checkpoint_dir=d)
+        assert res2.exec_stats.resumed_from == 6
+        assert res2.exec_stats.attempts == 0
+        assert res2.values == res.values
+
+
+# --- fluent builder ----------------------------------------------------------
+
+def test_pipeline_is_immutable():
+    p1 = qa.pipeline().metrics("paper")
+    p2 = p1.backend("pallas").chunked(4, checkpoint_dir="/tmp/x")
+    assert p1.exec.backend == "jnp" and p1.exec.chunks == 0
+    assert p2.exec.backend == "pallas" and p2.exec.chunks == 4
+    assert p2.metric_names == p1.metric_names == PAPER_METRICS
+    assert p2.single_shot().exec.chunks == 0
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p1.exec = None
+
+
+def test_pipeline_validation():
+    with pytest.raises(ValueError, match="backend"):
+        qa.pipeline().backend("tpu9000")
+    with pytest.raises(ValueError, match="unknown metrics"):
+        qa.pipeline().metrics("paper,NOT_A_METRIC")
+    with pytest.raises(ValueError, match="no metrics"):
+        qa.pipeline().metrics("")
+    # every construction path validates, not just the fluent method
+    with pytest.raises(ValueError, match="backend"):
+        qa.ExecutionConfig(backend="Pallas")
+
+
+def test_incompatible_checkpoint_rejected(tensor):
+    """Resuming a checkpoint written under different n_chunks or metrics
+    would merge stale counts for different data slices — must raise."""
+    with tempfile.TemporaryDirectory() as d:
+        qa.assess(tensor, metrics="paper", chunks=8, checkpoint_dir=d,
+                  checkpoint_every=4)
+        with pytest.raises(ValueError, match="incompatible"):
+            qa.assess(tensor, metrics="paper", chunks=4, checkpoint_dir=d)
+        with pytest.raises(ValueError, match="incompatible"):
+            qa.assess(tensor, metrics="L1,I2", chunks=8, checkpoint_dir=d)
+        # a different dataset must not resume another dataset's state
+        other = synth_encoded(N + 500, seed=99)
+        with pytest.raises(ValueError, match="incompatible"):
+            qa.assess(other, metrics="paper", chunks=8, checkpoint_dir=d)
+        # the matching configuration still resumes
+        res = qa.assess(tensor, metrics="paper", chunks=8, checkpoint_dir=d)
+        assert res.exec_stats.resumed_from == 8
+        assert res.exec_stats.attempts == 0
+
+
+def test_metric_selection_forms():
+    assert qa.pipeline().metrics("paper").metric_names == PAPER_METRICS
+    assert qa.pipeline().metrics("L1, I2").metric_names == ("L1", "I2")
+    assert qa.pipeline().metrics(["U1", "CN2"]).metric_names == ("U1", "CN2")
+    m = M.REGISTRY["RC1"]
+    assert qa.pipeline().metrics([m]).metric_names == ("RC1",)
+    assert set(ALL_METRICS) <= set(qa.pipeline().metrics("all").metric_names)
+    # an unregistered Metric object is accepted and registered on the fly
+    try:
+        um = qa.ratio_metric("X_UNREG", num=qa.is_blank("s"),
+                             auto_register=False)
+        assert "X_UNREG" not in M.REGISTRY
+        assert qa.pipeline().metrics(["L1", um]).metric_names == \
+            ("L1", "X_UNREG")
+        assert M.REGISTRY["X_UNREG"] is um
+        # ... but a name collision with a different definition is refused
+        impostor = qa.ratio_metric("L1", num=qa.is_blank("s"),
+                                   auto_register=False)
+        with pytest.raises(ValueError, match="already registered"):
+            qa.pipeline().metrics([impostor])
+        assert M.REGISTRY["L1"].description.startswith("Detection")
+    finally:
+        qa.unregister("X_UNREG")
+
+
+def test_describe_mentions_strategy():
+    d = qa.pipeline().metrics("paper").backend("pallas").per_metric() \
+          .chunked(8).describe()
+    assert "pallas" in d and "per-metric" in d and "chunked×8" in d
+
+
+# --- polymorphic ingest ------------------------------------------------------
+
+BSBM_BASE = ("http://bsbm.example.org/",)
+
+
+def test_ingest_nt_text_and_path_and_tensor(tmp_path):
+    nt = bsbm_ntriples(30, seed=1)
+    pipe = qa.pipeline().metrics("paper").base(*BSBM_BASE)
+    from_text = pipe.run(nt)
+    path = tmp_path / "data.nt"
+    path.write_text(nt)
+    from_path = pipe.run(str(path))
+    from_pathlike = pipe.run(path)
+    from_tensor = pipe.run(
+        __import__("repro.rdf", fromlist=["encode_ntriples"])
+        .encode_ntriples(nt, base_namespaces=BSBM_BASE))
+    for other in (from_path, from_pathlike, from_tensor):
+        assert other.values == from_text.values
+        assert other.n_triples == from_text.n_triples
+
+
+def test_ingest_missing_path_raises():
+    with pytest.raises(FileNotFoundError):
+        qa.pipeline().run("no_such_file.nt")
+    # a missing path containing a space must not be parsed as NT text
+    with pytest.raises(FileNotFoundError):
+        qa.pipeline().run("my data/no_such_file.nt")
+    # ... but a single statement-shaped line is content
+    res = qa.pipeline().metrics("L1").run(
+        "<http://a/s> <http://purl.org/dc/terms/license> <http://a/l> .")
+    assert res.n_triples == 1 and res.values["L1"] == 1.0
+
+
+def test_metric_alias_mixes_with_names():
+    p = qa.pipeline().metrics("paper,CS1")
+    assert p.metric_names == PAPER_METRICS + ("CS1",)
+    assert qa.pipeline().metrics("L1,L1,paper").metric_names == PAPER_METRICS
+
+
+def test_streaming_ingest_matches_whole(tensor):
+    """An iterable of chunks (tensors or NT text) is a streaming dataset."""
+    whole = qa.assess(tensor, metrics="paper")
+    parts = tensor.chunks(6)
+    streamed = qa.pipeline().metrics("paper").run(iter(parts))
+    assert streamed.exec_stats.chunks_total == 6
+    for k, v in whole.values.items():
+        assert streamed.values[k] == pytest.approx(v, abs=1e-9), k
+    # text chunks: split an N-Triples document line-wise
+    nt = bsbm_ntriples(20, seed=8)
+    lines = nt.splitlines()
+    half = len(lines) // 2
+    text_chunks = ["\n".join(lines[:half]), "\n".join(lines[half:])]
+    pipe = qa.pipeline().metrics("paper").base(*BSBM_BASE)
+    streamed_text = pipe.run(text_chunks)
+    whole_text = pipe.run(nt)
+    for k in ("I2", "U1", "RC1", "CN2"):
+        assert streamed_text.values[k] == pytest.approx(
+            whole_text.values[k], abs=1e-9), k
+
+
+# --- declarative custom metrics (LQML-style) ---------------------------------
+
+def test_declarative_builders_register_and_fuse(tensor):
+    try:
+        qa.ratio_metric("X_LIT", num=qa.is_literal("o"),
+                        dimension="test")
+        qa.exists_metric("X_HAS_BLANK", qa.is_blank("s"))
+        qa.count_metric("X_N_URI_S", qa.is_uri("s"))
+
+        @qa.qap_metric("X_URI_BALANCE", {"s": qa.is_uri("s"),
+                                         "o": qa.is_uri("o"),
+                                         "total": qa.valid_triple()})
+        def _balance(c):
+            return (c["s"] - c["o"]) / max(c["total"], 1)
+
+        names = PAPER_METRICS + ("X_LIT", "X_HAS_BLANK", "X_N_URI_S",
+                                 "X_URI_BALANCE")
+        res = qa.assess(tensor, metrics=names)
+        lit = res.counts["X_LIT"]
+        assert res.values["X_LIT"] == pytest.approx(
+            lit["num"] / lit["den"])
+        assert res.values["X_HAS_BLANK"] in (0.0, 1.0)
+        assert 0 < res.values["X_N_URI_S"] <= float(len(tensor))
+        assert res.values["X_N_URI_S"] == float(res.counts["X_N_URI_S"]["hit"])
+        # the user metrics share count(valid) with the built-in ratios
+        p = plan(M.get_metrics(names))
+        assert sum(e == M.valid_triple() for e in p.exprs) == 1
+        # user metrics run through "all" too
+        assert "X_LIT" in qa.pipeline().metrics("all").metric_names
+    finally:
+        for n in ("X_LIT", "X_HAS_BLANK", "X_N_URI_S", "X_URI_BALANCE"):
+            qa.unregister(n)
+    assert "X_LIT" not in M.REGISTRY
+
+
+def test_register_as_decorator_on_factory():
+    try:
+        @M.register
+        def _make():
+            return M.Metric(
+                name="X_FACTORY", dimension="test", description="d",
+                counters=(("hit", qa.valid_triple()),),
+                finalize=lambda c: float(c["hit"]))
+        assert "X_FACTORY" in M.REGISTRY
+    finally:
+        qa.unregister("X_FACTORY")
+
+
+# --- shim: legacy QualityEvaluator routes through the pipeline ---------------
+
+def test_evaluator_shim_matches_pipeline(tensor):
+    legacy = QualityEvaluator(PAPER_METRICS, fused=True).assess(tensor)
+    new = qa.pipeline().metrics("paper").run(tensor)
+    assert legacy.values == new.values

@@ -1,0 +1,67 @@
+"""DQV report emission: one measurement per metric, deterministic output,
+and N-Triples that re-parse through our own parser."""
+import json
+
+import pytest
+
+from repro.core import ALL_METRICS, PAPER_METRICS, QualityEvaluator, report
+from repro.rdf import synth_encoded
+from repro.rdf.parser import parse_ntriples
+
+TS = "2020-01-01T00:00:00+00:00"
+
+
+@pytest.fixture(scope="module")
+def result():
+    return QualityEvaluator(ALL_METRICS, fused=True).assess(
+        synth_encoded(4000, seed=17))
+
+
+def test_dqv_one_measurement_per_metric(result):
+    dqv = report.to_dqv(result, dataset_uri="urn:test:ds", computed_on=TS)
+    assert len(dqv["measurements"]) == len(ALL_METRICS)
+    measured = {m[report.DQV + "isMeasurementOf"]["@id"]
+                for m in dqv["measurements"]}
+    assert measured == {f"urn:repro:metric:{n}" for n in ALL_METRICS}
+    for m in dqv["measurements"]:
+        assert m[report.DQV + "computedOn"]["@id"] == "urn:test:ds"
+        assert m["generatedAtTime"] == TS
+        assert isinstance(m[report.DQV + "value"], float)
+        assert m["inDimension"] and m["description"]
+
+
+def test_dqv_deterministic_under_fixed_timestamp(result):
+    a = report.to_dqv(result, computed_on=TS)
+    b = report.to_dqv(result, computed_on=TS)
+    assert a == b
+    assert report.to_json(result, computed_on=TS) == \
+        report.to_json(result, computed_on=TS)
+    # and json round-trips
+    assert json.loads(report.to_json(result, computed_on=TS)) == a
+
+
+def test_ntriples_report_reparses(result):
+    nt = report.to_ntriples(result, dataset_uri="urn:test:ds")
+    triples = parse_ntriples(nt)
+    # no malformed lines (the parser flags them with a sentinel IRI)
+    assert all(s.value != "urn:repro:parse-error" for s, _, _ in triples)
+    # one dqv:value triple per metric, carried as a typed double literal
+    values = [(s, p, o) for s, p, o in triples
+              if p.value == report.DQV + "value"]
+    assert len(values) == len(result.values)
+    for s, _, o in values:
+        assert s.kind == "blank"
+        assert o.kind == "literal"
+        assert o.datatype == "http://www.w3.org/2001/XMLSchema#double"
+        float(o.value)  # parses as a number
+    # every measurement links back to the dataset
+    linked = {s.value for s, p, o in triples
+              if p.value == report.DQV + "computedOn"
+              and o.value == "urn:test:ds"}
+    assert len(linked) == len(result.values)
+
+
+def test_ntriples_report_deterministic(result):
+    assert report.to_ntriples(result) == report.to_ntriples(result)
+    lines = report.to_ntriples(result).strip().splitlines()
+    assert len(lines) == 3 * len(result.values)
