@@ -21,7 +21,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table4,fig2,fig3,fig4,roofline")
+                    help="comma list: table4,fig2,fig3,fig4,roofline,ingest")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -77,6 +77,15 @@ def main():
             print(f"    fused (1 pass):        {d['fused_1_pass_s']:6.3f}s "
                   f"-> {d['fusion_speedup']:4.1f}x")
             print(f"    fused, all 16 metrics: {d['fused_all_16_metrics_s']:6.3f}s")
+
+    if only is None or "ingest" in only:
+        _section("Ingest — legacy parse+encode vs vectorized rdf.ingest")
+        from . import fig_ingest
+        p = fig_ingest.run(smoke=args.quick)
+        if p.get("speedup_at_largest_measured"):
+            print(f"  headline: {p['speedup_at_largest_measured']:.1f}x at "
+                  f"{p['n_triples_at_largest_measured']:,} triples "
+                  f"(identical={p['all_identical']})")
 
     if only is None or "roofline" in only:
         _section("Roofline — per (arch × shape) from the dry-run")

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--chunks", type=int, default=0,
                     help=">0: fault-tolerant chunked scan with this many "
                          "chunks")
+    ap.add_argument("--stream", type=int, default=0, metavar="TRIPLES",
+                    help=">0: bounded-memory streaming ingest of --nt, "
+                         "yielding chunks of this many triples")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--dqv", action="store_true", help="emit DQV JSON-LD")
     args = ap.parse_args()
@@ -40,6 +43,9 @@ def main():
         pipe = pipe.per_metric()
     if args.chunks:
         pipe = pipe.chunked(args.chunks, checkpoint_dir=args.checkpoint_dir)
+    if args.stream:
+        pipe = pipe.streamed(args.stream,
+                             checkpoint_dir=args.checkpoint_dir)
     if args.base:
         pipe = pipe.base(*args.base)
 

@@ -27,7 +27,8 @@ from ..core.metrics import (ALL_METRICS, EXTENDED_METRICS, PAPER_METRICS,
                             SKETCH_METRICS, REGISTRY, Metric, register)
 from ..core import sketches as hll
 from ..dist import ChunkScheduler
-from ..rdf import TripleTensor, encode_ntriples
+from ..rdf import TripleTensor
+from ..rdf import ingest as rdf_ingest
 
 BACKENDS = ("jnp", "pallas")
 
@@ -52,6 +53,7 @@ class ExecutionConfig:
     checkpoint_every: int = 8
     interpret: bool = True             # pallas interpret mode (CPU hosts)
     hll_p: int = hll.DEFAULT_P
+    stream_triples: int = 0            # >0: streaming ingest chunk size
 
     def __post_init__(self):
         # validate here so every construction path (fluent, qa.assess
@@ -62,6 +64,9 @@ class ExecutionConfig:
                 f"backend must be one of {BACKENDS}, got {self.backend!r}")
         if self.chunks < 0:
             raise ValueError(f"chunks must be >= 0, got {self.chunks}")
+        if self.stream_triples < 0:
+            raise ValueError(
+                f"stream_triples must be >= 0, got {self.stream_triples}")
 
 
 def _resolve_metrics(spec) -> tuple[str, ...]:
@@ -149,8 +154,26 @@ class Pipeline:
         return self._exec(chunks=int(n_chunks), checkpoint_dir=checkpoint_dir,
                           checkpoint_every=checkpoint_every)
 
+    def streamed(self, chunk_triples: int = 65_536, *,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: Optional[int] = None) -> "Pipeline":
+        """Bounded-memory ingest: N-Triples paths/text are read in blocks
+        and fed to the scheduler as ready ``TripleTensor`` chunks of
+        ``chunk_triples`` rows (``rdf.ingest.stream_chunks``) — the full
+        dataset is never resident. Term ids stay global across chunks, so
+        results (sketches included) match the single-shot pass exactly.
+        ``checkpoint_dir`` enables scheduler checkpoint/resume for the
+        stream without needing a separate ``chunked()`` call (when omitted,
+        any checkpointing configured via ``chunked()`` is left untouched)."""
+        kw: dict = dict(stream_triples=int(chunk_triples))
+        if checkpoint_dir is not None:
+            kw["checkpoint_dir"] = checkpoint_dir
+        if checkpoint_every is not None:
+            kw["checkpoint_every"] = checkpoint_every
+        return self._exec(**kw)
+
     def single_shot(self) -> "Pipeline":
-        return self._exec(chunks=0, checkpoint_dir=None)
+        return self._exec(chunks=0, checkpoint_dir=None, stream_triples=0)
 
     def interpret(self, flag: bool) -> "Pipeline":
         return self._exec(interpret=flag)
@@ -192,7 +215,9 @@ class Pipeline:
 
     # -- ingest ----------------------------------------------------------------
     def _encode(self, text: str) -> TripleTensor:
-        return encode_ntriples(text, base_namespaces=self.base_ns)
+        # vectorized fast path; byte-identical to the legacy
+        # parse_ntriples→encode reference (tests/test_ingest.py)
+        return rdf_ingest.parse_encode(text, base_namespaces=self.base_ns)
 
     @staticmethod
     def _looks_like_ntriples(text: str) -> bool:
@@ -204,16 +229,21 @@ class Pipeline:
         t = text.strip()
         return t.startswith(("<", "_:", "#")) and t.endswith(".")
 
+    @staticmethod
+    def _is_path(item) -> bool:
+        return isinstance(item, os.PathLike) or (
+            isinstance(item, str) and "\n" not in item and len(item) < 4096
+            and os.path.exists(item))
+
     def _ingest_one(self, item) -> TripleTensor:
         if isinstance(item, TripleTensor):
             return item
         if isinstance(item, os.PathLike):
-            with open(os.fspath(item)) as f:
+            with open(os.fspath(item), "rb") as f:
                 return self._encode(f.read())
         if isinstance(item, str):
-            if ("\n" not in item and len(item) < 4096
-                    and os.path.exists(item)):
-                with open(item) as f:
+            if self._is_path(item):
+                with open(item, "rb") as f:
                     return self._encode(f.read())
             if self._looks_like_ntriples(item):
                 return self._encode(item)
@@ -224,6 +254,18 @@ class Pipeline:
         """Encode without assessing: → a ``TripleTensor``, or a lazy
         stream of chunk tensors. Useful to time or reuse ingestion
         separately from evaluation."""
+        st = self.exec.stream_triples
+        if st and not isinstance(dataset, TripleTensor):
+            if self._is_path(dataset):
+                return rdf_ingest.stream_chunks(
+                    dataset, st, base_namespaces=self.base_ns)
+            if isinstance(dataset, str):
+                if self._looks_like_ntriples(dataset):
+                    return rdf_ingest.stream_chunks_text(
+                        dataset, st, base_namespaces=self.base_ns)
+                raise FileNotFoundError(
+                    f"no such N-Triples file: {dataset!r}")
+            # pre-chunked iterables fall through to the generic path
         if isinstance(dataset, (TripleTensor, str, os.PathLike)):
             return self._ingest_one(dataset)
         if hasattr(dataset, "__iter__"):
@@ -235,6 +277,8 @@ class Pipeline:
     def describe(self) -> str:
         e = self.exec
         mode = (f"chunked×{e.chunks}" if e.chunks else "single-shot")
+        if e.stream_triples:
+            mode += f" streamed@{e.stream_triples}"
         if e.checkpoint_dir:
             mode += f" ckpt={e.checkpoint_dir}"
         mesh = (f" mesh={tuple(e.mesh.axis_names)}" if e.mesh is not None

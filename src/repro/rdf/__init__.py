@@ -1,7 +1,9 @@
 """RDF substrate: parsing, dictionary encoding, the TripleTensor main dataset,
 and synthetic data generation (BSBM-style, as in the paper's evaluation)."""
-from .parser import Term, parse_lines, parse_ntriples, parse_term
+from .parser import (Term, escape_literal, parse_lines, parse_ntriples,
+                     parse_term, unescape_literal)
 from .encoder import TermDictionary, encode, encode_ntriples
+from .ingest import parse_encode, stream_chunks, stream_chunks_text
 from .triple_tensor import (
     TripleTensor, from_columns, empty,
     COL_S, COL_P, COL_O, COL_S_FLAGS, COL_P_FLAGS, COL_O_FLAGS,
@@ -11,7 +13,9 @@ from . import vocab
 
 __all__ = [
     "Term", "parse_lines", "parse_ntriples", "parse_term",
+    "escape_literal", "unescape_literal",
     "TermDictionary", "encode", "encode_ntriples",
+    "parse_encode", "stream_chunks", "stream_chunks_text",
     "TripleTensor", "from_columns", "empty", "vocab",
     "DirtProfile", "bsbm_ntriples", "synth_encoded",
     "COL_S", "COL_P", "COL_O", "COL_S_FLAGS", "COL_P_FLAGS", "COL_O_FLAGS",

@@ -3,6 +3,13 @@
 This is the single string-touching stage (host-side, vectorizable across
 cores). Everything any metric predicate may ask about a term is computed here
 once and packed into the TripleTensor planes.
+
+The dictionary is keyed on the UTF-8 bytes of ``Term.key()`` (canonical,
+injective over terms), which lets the vectorized ingest path
+(``repro.rdf.ingest``) intern whole batches of deduplicated token
+byte-slices without materializing Python strings; ``terms`` decodes lazily.
+Per-id metadata lives in growable int32 arrays so per-chunk plane gathers
+need no list→array conversion.
 """
 from __future__ import annotations
 
@@ -15,20 +22,68 @@ from .parser import Term
 from .triple_tensor import TripleTensor, N_PLANES, from_columns
 
 
+class _IntBuf:
+    """Append-friendly int32 array (amortized O(1) growth, zero-copy view)."""
+
+    def __init__(self, cap: int = 1024):
+        self._a = np.zeros(cap, np.int32)
+        self.n = 0
+
+    def append(self, v: int) -> None:
+        if self.n == self._a.size:
+            self._a = np.concatenate([self._a, np.zeros(self._a.size,
+                                                        np.int32)])
+        self._a[self.n] = v
+        self.n += 1
+
+    def extend(self, vals: np.ndarray) -> None:
+        need = self.n + len(vals)
+        if need > self._a.size:
+            cap = max(need, 2 * self._a.size)
+            a = np.zeros(cap, np.int32)
+            a[:self.n] = self._a[:self.n]
+            self._a = a
+        self._a[self.n:need] = vals
+        self.n = need
+
+    def view(self) -> np.ndarray:
+        return self._a[:self.n]
+
+
 class TermDictionary:
     """Interns terms → dense int32 ids and caches their flag metadata."""
 
     def __init__(self, base_namespaces: Sequence[str] = ()):
         self.base_namespaces = tuple(base_namespaces)
-        self._ids: dict[str, int] = {}
-        # Per-term metadata, indexed by id.
-        self.flags: list[int] = []
-        self.lengths: list[int] = []
-        self.datatypes: list[int] = []
-        self.terms: list[str] = []
+        self._ids: dict[bytes, int] = {}   # utf-8 Term.key() bytes → id
+        self._kb: list[bytes] = []         # id → key bytes
+        self._flags = _IntBuf()
+        self._lengths = _IntBuf()
+        self._dts = _IntBuf()
+        self._terms_cache: list[str] | None = None
 
     def __len__(self) -> int:
-        return len(self._ids)
+        return len(self._kb)
+
+    # -- per-id metadata views -------------------------------------------------
+    @property
+    def flags(self) -> np.ndarray:
+        return self._flags.view()
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return self._lengths.view()
+
+    @property
+    def datatypes(self) -> np.ndarray:
+        return self._dts.view()
+
+    @property
+    def terms(self) -> list[str]:
+        """Term keys in id order (decoded lazily, cached)."""
+        if self._terms_cache is None or len(self._terms_cache) != len(self._kb):
+            self._terms_cache = [k.decode("utf-8") for k in self._kb]
+        return self._terms_cache
 
     def _term_flags(self, t: Term) -> tuple[int, int, int]:
         """Returns (flags, length, datatype_id) for a term."""
@@ -68,33 +123,83 @@ class TermDictionary:
         return f, length, dt_id
 
     def intern(self, t: Term) -> int:
-        key = t.key()
-        tid = self._ids.get(key)
+        kb = t.key().encode("utf-8")
+        tid = self._ids.get(kb)
         if tid is not None:
             return tid
-        tid = len(self._ids)
-        self._ids[key] = tid
+        tid = len(self._kb)
+        self._ids[kb] = tid
         f, length, dt = self._term_flags(t)
-        self.flags.append(f)
-        self.lengths.append(length)
-        self.datatypes.append(dt)
-        self.terms.append(key)
+        self._kb.append(kb)
+        self._flags.append(f)
+        self._lengths.append(length)
+        self._dts.append(dt)
         return tid
+
+    # -- vectorized fast path (repro.rdf.ingest) ------------------------------
+    def intern_keys_batch(self, key_bytes: Sequence[bytes],
+                          flags: np.ndarray, lengths: np.ndarray,
+                          datatypes: np.ndarray) -> np.ndarray:
+        """Bulk-intern already-deduplicated terms → int64 id array.
+
+        ``key_bytes`` must be distinct, in first-appearance order over the
+        dataset (so ids come out identical to a per-term ``intern()`` loop),
+        and each entry must be the UTF-8 of the decoded term's ``key()``;
+        the supplied metadata must equal what ``_term_flags`` would compute.
+        The differential suite holds the two implementations together.
+        """
+        if not self._ids:
+            # fresh dictionary: every key is new, ids are just the sequence
+            n = len(key_bytes)
+            ids = np.arange(n, dtype=np.int64)
+            self._ids.update(zip(key_bytes, range(n)))
+            self._kb.extend(key_bytes)
+            self._flags.extend(np.asarray(flags))
+            self._lengths.extend(np.asarray(lengths))
+            self._dts.extend(np.asarray(datatypes))
+            return ids
+        hits = list(map(self._ids.get, key_bytes))
+        ids = np.empty(len(key_bytes), np.int64)
+        base = len(self._kb)
+        new_rows = []
+        n_new = 0
+        _ids = self._ids
+        for i, tid in enumerate(hits):
+            if tid is None:
+                kb = key_bytes[i]
+                tid = base + n_new
+                _ids[kb] = tid
+                self._kb.append(kb)
+                new_rows.append(i)
+                n_new += 1
+            ids[i] = tid
+        if new_rows:
+            flags = np.asarray(flags)
+            lengths = np.asarray(lengths)
+            datatypes = np.asarray(datatypes)
+            self._flags.extend(flags[new_rows])
+            self._lengths.extend(lengths[new_rows])
+            self._dts.extend(datatypes[new_rows])
+        return ids
+
+    def plane_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-id (flags, lengths, datatypes) int32 views for gathers."""
+        return self._flags.view(), self._lengths.view(), self._dts.view()
 
 
 def encode(triples: Iterable[tuple[Term, Term, Term]],
            base_namespaces: Sequence[str] = (),
            dictionary: TermDictionary | None = None) -> TripleTensor:
     """Encode parsed triples into a TripleTensor (the *main dataset*)."""
-    d = dictionary or TermDictionary(base_namespaces)
+    # NOT `dictionary or ...`: an empty TermDictionary is falsy (len 0) and
+    # must still be used — and populated — when explicitly passed in.
+    d = dictionary if dictionary is not None else TermDictionary(base_namespaces)
     s_ids, p_ids, o_ids = [], [], []
     for s, p, o in triples:
         s_ids.append(d.intern(s))
         p_ids.append(d.intern(p))
         o_ids.append(d.intern(o))
-    flags = np.asarray(d.flags, dtype=np.int32)
-    lengths = np.asarray(d.lengths, dtype=np.int32)
-    dts = np.asarray(d.datatypes, dtype=np.int32)
+    flags, lengths, dts = d.plane_arrays()
     s = np.asarray(s_ids, dtype=np.int32)
     p = np.asarray(p_ids, dtype=np.int32)
     o = np.asarray(o_ids, dtype=np.int32)

@@ -1,0 +1,95 @@
+"""Property-based round-trip tests for the parse→encode path (hypothesis).
+
+Random Terms (IRIs, blank nodes, literals with languages, datatypes, and
+escape-requiring characters) are serialized with ``Term.key()`` into
+N-Triples lines, then parsed by BOTH the legacy regex parser and the
+vectorized ingest path: the keys must round-trip and the two encoders must
+produce byte-identical flag planes and dictionaries.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.rdf import (Term, TermDictionary, encode, escape_literal,
+                       parse_encode, parse_ntriples, parse_term,
+                       unescape_literal)
+
+# Characters that survive a round-trip through one N-Triples *line*:
+# anything except line breaks the legacy str machinery would split on.
+# (\n \r \t are fine in literals — Term.key() escapes them.)
+_LINE_BREAKERS = "\x0b\x0c\x1c\x1d\x1e\x85\u2028\u2029"
+_VALUE_CHARS = st.characters(
+    blacklist_categories=("Cs",), blacklist_characters=_LINE_BREAKERS)
+_IRI_CHARS = st.characters(
+    blacklist_categories=("Cs", "Cc"),
+    blacklist_characters=">" + _LINE_BREAKERS)
+
+iris = st.text(_IRI_CHARS, min_size=1, max_size=60)
+blanks = st.text(st.sampled_from("abcXYZ019_"), min_size=1, max_size=20)
+langs = st.text(st.sampled_from("abcdXYZ019-"), min_size=1, max_size=12)
+
+
+@st.composite
+def terms(draw):
+    kind = draw(st.sampled_from(["iri", "blank", "lit", "lit_lang", "lit_dt"]))
+    if kind == "iri":
+        return Term("iri", draw(iris))
+    if kind == "blank":
+        return Term("blank", draw(blanks))
+    value = draw(st.text(_VALUE_CHARS, max_size=60))
+    if kind == "lit_lang":
+        return Term("literal", value, lang=draw(langs))
+    if kind == "lit_dt":
+        return Term("literal", value, datatype=draw(iris))
+    return Term("literal", value)
+
+
+subjects = st.one_of(st.builds(Term, st.just("iri"), iris),
+                     st.builds(Term, st.just("blank"), blanks))
+predicates = st.builds(Term, st.just("iri"), iris)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.tuples(subjects, predicates, terms()),
+                min_size=1, max_size=8))
+def test_roundtrip_and_differential(triples):
+    text = "".join(f"{s.key()} {p.key()} {o.key()} .\n"
+                   for s, p, o in triples)
+    parsed = parse_ntriples(text)
+    assert len(parsed) == len(triples)
+    for (s, p, o), (ps, pp, po) in zip(triples, parsed):
+        # Term.key() round-trips through serialize → parse
+        assert ps.key() == s.key()
+        assert pp.key() == p.key()
+        assert po.key() == o.key()
+    # and the two encoders agree bit-for-bit
+    d_ref = TermDictionary()
+    ref = encode(parsed, dictionary=d_ref)
+    d_vec = TermDictionary()
+    vec = parse_encode(text, dictionary=d_vec)
+    assert np.array_equal(ref.planes, vec.planes)
+    assert d_ref.terms == d_vec.terms
+    assert np.array_equal(d_ref.flags, d_vec.flags)
+    assert np.array_equal(d_ref.lengths, d_vec.lengths)
+    assert np.array_equal(d_ref.datatypes, d_vec.datatypes)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.text(_VALUE_CHARS, max_size=80))
+def test_escape_unescape_roundtrip(value):
+    assert unescape_literal(escape_literal(value)) == value
+    t = Term("literal", value)
+    assert parse_term(t.key()).value == value
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.text(_VALUE_CHARS, max_size=40), st.none() | langs,
+       st.none() | iris)
+def test_literal_key_parses_as_same_term(value, lang, dt):
+    if lang is not None:
+        dt = None                   # N-Triples literals carry one or the other
+    t = Term("literal", value, lang=lang, datatype=dt)
+    rt = parse_term(t.key())
+    assert rt == t

@@ -9,8 +9,8 @@ except ImportError:  # property test falls back to a fixed grid
     HAVE_HYPOTHESIS = False
 
 from repro.rdf import (DirtProfile, Term, bsbm_ntriples, encode,
-                       encode_ntriples, parse_ntriples, parse_term,
-                       synth_encoded, vocab)
+                       encode_ntriples, escape_literal, parse_ntriples,
+                       parse_term, synth_encoded, unescape_literal, vocab)
 from repro.rdf.triple_tensor import (COL_O_FLAGS, COL_P_FLAGS, COL_S_FLAGS,
                                      COL_S_LEN, N_PLANES)
 
@@ -24,6 +24,39 @@ def test_parse_terms():
     assert t.kind == "literal" and t.lang == "en"
     t = parse_term('"42"^^<http://www.w3.org/2001/XMLSchema#integer>')
     assert t.datatype.endswith("integer")
+
+
+def test_literal_escapes_are_decoded():
+    """Regression: lexical forms must be stored *unescaped* — flag planes,
+    lengths, and lexical validation judge the real value, and ``Term.key()``
+    re-escapes for canonical serialization."""
+    t = parse_term(r'"a \"quoted\" string"')
+    assert t.value == 'a "quoted" string'
+    assert t.key() == r'"a \"quoted\" string"'
+    t = parse_term(r'"line\nbreak\ttab\\slash"')
+    assert t.value == "line\nbreak\ttab\\slash"
+    assert parse_term(t.key()) == t
+    t = parse_term(r'"uni A\U00000042"')
+    assert t.value == "uni AB"
+    # invalid escapes survive verbatim (quality tools must see the dirt)
+    assert parse_term(r'"bad \q escape"').value == r"bad \q escape"
+    assert unescape_literal(escape_literal("\\ \" \n \r \t")) == "\\ \" \n \r \t"
+
+
+def test_escaped_literal_planes_use_unescaped_value():
+    # "12\n34" escaped: 5 real characters, not 6 — and the escaped and raw
+    # spellings of the same tab literal intern to ONE term
+    text = ('<http://s> <http://p> "12\\n34" .\n'
+            '<http://s> <http://p> "a\\tb" .\n'
+            '<http://s> <http://p> "a\tb" .\n'
+            '<http://s> <http://p> "4\\n2"^^'
+            '<http://www.w3.org/2001/XMLSchema#integer> .\n')
+    tt = encode_ntriples(text)
+    from repro.rdf.triple_tensor import COL_O_FLAGS, COL_O_LEN
+    assert tt.planes[0, COL_O_LEN] == 5
+    assert tt.planes[1, 2] == tt.planes[2, 2]          # same object id
+    # "4\n2" is NOT a lexically valid xsd:integer once unescaped
+    assert not (tt.planes[3, COL_O_FLAGS] & vocab.LEXICAL_OK)
 
 
 def test_parse_ntriples_roundtrip():
