@@ -1,0 +1,186 @@
+"""Scan benchmark — passes-over-data and wall time for the execution engine.
+
+  PYTHONPATH=src python -m benchmarks.fig_scan [--smoke]
+
+Emits ``results/BENCH_scan.json``:
+
+* **passes** — ACTUAL HBM data passes per chunk (measured by the kernel
+  scan counter, ``QualityEvaluator.passes_per_chunk``) for
+  {jnp, pallas-2pass, fused_scan} × {sketch metrics on, off}: with sketches
+  the two-kernel pallas path pays ``1 + S`` scans, the fused_scan
+  megakernel exactly 1.
+* **single_shot** — eval wall time per backend on a synthetic tensor,
+  sketches on and off (min over repeats, compile excluded).  The pallas
+  paths run in interpret mode on this CPU container, so their ABSOLUTE
+  times are not TPU-representative — the pass counts and the
+  pallas-2pass↔fused_scan RATIO are the portable signal.
+* **executor** — end-to-end streamed ingest of an on-disk BSBM corpus
+  through the chunk scheduler, sequential vs async double-buffered
+  (``prefetch=1``): the async executor overlaps host tokenization +
+  transfer of chunk i+1 with compute on chunk i.  The win tracks
+  ``min(ingest, compute)``: decisive when compute is comparable to ingest
+  (fused_scan backend), ~nil for the cheap jnp-fused compute.
+* equality — every combination's metric values must be EXACTLY equal and
+  every backend's HLL register banks bit-identical.
+
+``--smoke`` shrinks sizes for CI; the JSON is uploaded as a workflow
+artifact so the perf trajectory is recorded per-PR.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro import qa
+from repro.core import ALL_METRICS, PAPER_METRICS, QualityEvaluator
+from repro.rdf import bsbm_ntriples, synth_encoded
+
+from .common import save_json
+
+BSBM_NS = ("http://bsbm.example.org/",)
+BACKENDS = ("jnp", "pallas", "fused_scan")
+
+SINGLE_N, SMOKE_SINGLE_N = 100_000, 20_000
+STREAM_BLOCKS, SMOKE_STREAM_BLOCKS = 4, 1          # ×20k products each
+STREAM_CHUNK, SMOKE_STREAM_CHUNK = 65_536, 16_384
+
+
+def _best(fn, repeats: int):
+    """(result, best_seconds) — min over repeats; first run is warmup
+    (compile) and not timed."""
+    out = fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _passes_section() -> list[dict]:
+    rows = []
+    for backend in BACKENDS:
+        for metrics, label in ((PAPER_METRICS, "off"), (ALL_METRICS, "on")):
+            ev = QualityEvaluator(metrics, fused=True, backend=backend)
+            rows.append(dict(backend=backend, sketches=label,
+                             n_sketches=len(ev._all_sketch_specs()),
+                             passes_per_chunk=ev.passes_per_chunk))
+            print(f"  {backend:>10s} sketches={label:3s}: "
+                  f"{ev.passes_per_chunk} pass(es)", flush=True)
+    return rows
+
+
+def _single_shot_section(n: int, repeats: int):
+    tt = synth_encoded(n, seed=3)
+    rows, values_by_combo, regs_by_backend = [], {}, {}
+    for backend in BACKENDS:
+        for metrics, label in ((PAPER_METRICS, "off"), (ALL_METRICS, "on")):
+            pipe = qa.pipeline().metrics(metrics).backend(backend)
+            res, secs = _best(lambda: pipe.run(tt), repeats)
+            values_by_combo[f"{backend}/sketch-{label}"] = res.values
+            rows.append(dict(backend=backend, sketches=label,
+                             n_triples=res.n_triples, passes=res.passes,
+                             eval_s=secs, tps=res.n_triples / secs))
+            print(f"  {backend:>10s} sketches={label:3s}: {secs:7.3f}s "
+                  f"({res.passes} pass(es))", flush=True)
+        _, regs = QualityEvaluator(
+            ALL_METRICS, fused=True, backend=backend).eval_chunk(tt)
+        regs_by_backend[backend] = regs
+    ref = regs_by_backend["jnp"]
+    regs_identical = all(
+        all(np.array_equal(regs[k], ref[k]) for k in ref)
+        for regs in regs_by_backend.values())
+    return rows, values_by_combo, regs_identical
+
+
+def _executor_section(blocks: int, chunk_triples: int, repeats: int):
+    """Streamed ingest end-to-end: sequential vs async double-buffered."""
+    path = os.path.join(tempfile.mkdtemp(prefix="bench_scan_"), "data.nt")
+    with open(path, "w") as f:
+        for b in range(blocks):
+            f.write(bsbm_ntriples(20_000, seed=100 + b))
+
+    rows, values_by_combo = [], {}
+    configs = (("jnp", True), ("jnp", False), ("fused_scan", True))
+    for backend, fused in configs:
+        pipe = qa.pipeline().metrics("all").backend(backend).fused(fused) \
+                 .base(*BSBM_NS).streamed(chunk_triples)
+        label = f"{backend}/{'fused' if fused else 'per-metric'}"
+        row = dict(backend=backend, fused=fused,
+                   chunk_triples=chunk_triples)
+        for mode, p in (("sync", pipe), ("async", pipe.pipelined())):
+            res, secs = _best(lambda: p.run(path), repeats)
+            row[f"{mode}_s"] = secs
+            row[f"{mode}_host_blocked_s"] = sum(
+                res.exec_stats.chunk_eval_seconds)
+            row["n_triples"] = res.n_triples
+            row["n_chunks"] = res.exec_stats.chunks_total
+            values_by_combo[f"exec:{label}/{mode}"] = res.values
+        row["async_speedup"] = row["sync_s"] / row["async_s"]
+        rows.append(row)
+        print(f"  {label:>22s}: sync {row['sync_s']:7.3f}s  async "
+              f"{row['async_s']:7.3f}s  speedup "
+              f"{row['async_speedup']:.2f}x", flush=True)
+    os.remove(path)
+    return rows, values_by_combo
+
+
+def run(smoke: bool = False) -> dict:
+    repeats = 1 if smoke else 2
+    print("actual data passes per chunk:", flush=True)
+    passes = _passes_section()
+    print("single-shot eval wall time:", flush=True)
+    single, values_a, regs_identical = _single_shot_section(
+        SMOKE_SINGLE_N if smoke else SINGLE_N, repeats)
+    print("streamed executor (sequential vs async double-buffered):",
+          flush=True)
+    executor, values_b = _executor_section(
+        SMOKE_STREAM_BLOCKS if smoke else STREAM_BLOCKS,
+        SMOKE_STREAM_CHUNK if smoke else STREAM_CHUNK, repeats)
+
+    def _all_equal(by_combo):
+        """Exact equality within each metric-set group (sketch-on and
+        sketch-off combos measure different metric sets)."""
+        groups: dict[frozenset, dict] = {}
+        for combo, values in by_combo.items():
+            ref = groups.setdefault(frozenset(values), values)
+            if values != ref:
+                print(f"  MISMATCH at {combo}")
+                return False
+        return True
+
+    fused_scan_passes = next(
+        r["passes_per_chunk"] for r in passes
+        if r["backend"] == "fused_scan" and r["sketches"] == "on")
+    fs_exec = next(r for r in executor if r["backend"] == "fused_scan")
+    payload = {
+        "mode": "smoke" if smoke else "full",
+        "passes": passes,
+        "single_shot": single,
+        "executor": executor,
+        "fused_scan_passes_with_sketches": fused_scan_passes,
+        "async_speedup_fused_scan": fs_exec["async_speedup"],
+        "async_beats_sync_on_stream": bool(fs_exec["async_speedup"] > 1.0),
+        "all_values_identical": bool(
+            _all_equal(values_a) and _all_equal(values_b)),
+        "hll_registers_bit_identical": bool(regs_identical),
+    }
+    path = save_json("BENCH_scan.json", payload)
+    print(f"wrote {path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI smoke runs")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

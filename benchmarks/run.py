@@ -21,7 +21,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table4,fig2,fig3,fig4,roofline,ingest")
+                    help="comma list: table4,fig2,fig3,fig4,roofline,"
+                         "ingest,scan")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -86,6 +87,17 @@ def main():
             print(f"  headline: {p['speedup_at_largest_measured']:.1f}x at "
                   f"{p['n_triples_at_largest_measured']:,} triples "
                   f"(identical={p['all_identical']})")
+
+    if only is None or "scan" in only:
+        _section("Scan — passes over data + sync vs async executor")
+        from . import fig_scan
+        p = fig_scan.run(smoke=args.quick)
+        print(f"  headline: fused_scan = "
+              f"{p['fused_scan_passes_with_sketches']} pass(es) with "
+              f"sketches; async speedup "
+              f"{p['async_speedup_fused_scan']:.2f}x on streamed ingest "
+              f"(identical={p['all_values_identical']}, "
+              f"registers={p['hll_registers_bit_identical']})")
 
     if only is None or "roofline" in only:
         _section("Roofline — per (arch × shape) from the dry-run")

@@ -39,6 +39,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._writer: threading.Thread | None = None
+        self._writer_exc: BaseException | None = None
 
     # -- save ------------------------------------------------------------------
     def _write(self, step: int, flat: dict[str, np.ndarray],
@@ -75,16 +76,28 @@ class CheckpointManager:
 
     def save_async(self, step: int, tree,
                    metadata: dict[str, Any] | None = None):
-        self.wait()  # one outstanding write at a time
+        self.wait()  # one outstanding write at a time (raises if it failed)
         flat, _ = _flatten(tree)  # device→host copy happens on caller thread
-        self._writer = threading.Thread(
-            target=self._write, args=(step, flat, metadata or {}), daemon=True)
+
+        def _write_capturing():
+            try:
+                self._write(step, flat, metadata or {})
+            except BaseException as e:  # re-raised on the caller's thread
+                self._writer_exc = e
+
+        self._writer = threading.Thread(target=_write_capturing, daemon=True)
         self._writer.start()
 
     def wait(self):
+        """Join any in-flight async write; re-raises its exception (disk
+        full, permissions, ...) on the caller's thread — a joined write
+        either landed durably or this raises."""
         if self._writer is not None:
             self._writer.join()
             self._writer = None
+        if self._writer_exc is not None:
+            exc, self._writer_exc = self._writer_exc, None
+            raise exc
 
     # -- restore ---------------------------------------------------------------
     def all_steps(self) -> list[int]:

@@ -2,15 +2,22 @@
 
 Execution modes:
 
-* ``fused=True`` (ours, beyond-paper): ONE pass over the main dataset
+* ``fused=True`` (ours, beyond-paper): ONE plan over the main dataset
   evaluates every requested metric — the planner's deduped bytecode.
 * ``fused=False`` (paper-faithful Algorithm 1): ``foreach m ∈ metrics`` run a
   separate pass; this is the §Perf baseline.
-* ``backend='jnp' | 'pallas'``: mask-based XLA path, or the fused Pallas
-  kernel (``kernels/qap_count``) for the predicate+count scan.
+* ``backend='jnp' | 'pallas' | 'fused_scan'``: mask-based XLA path, the
+  two-kernel Pallas path (``kernels/qap_count`` + one ``kernels/hll`` scan
+  per sketch — ``1 + S`` data passes), or the one-true-pass megakernel
+  (``kernels/fused_scan``: counters AND every sketch register bank per
+  VMEM-resident block — exactly 1 data pass).
 * ``mesh``: when given, rows are sharded over *all* mesh axes (quality
   assessment is purely data-parallel — every chip is a Spark "worker") and
   counters/sketches are reduced with ``psum``/``pmax`` inside ``shard_map``.
+
+``AssessmentResult.passes`` reports ACTUAL data passes: each op wrapper
+that streams the planes once records a scan (``kernels.record_scan``), and
+``passes_per_chunk`` traces the pass functions under that counter.
 """
 from __future__ import annotations
 
@@ -24,11 +31,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import compat
+from ..kernels import count_scans, record_scan
 from ..rdf.triple_tensor import TripleTensor, COL_S_FLAGS, N_PLANES
 from . import sketches as hll
 from .expr import eval_program_jnp
 from .metrics import ALL_METRICS, Metric, get_metrics
 from .planner import Plan, plan, plan_single
+
+BACKENDS = ("jnp", "pallas", "fused_scan")
 
 
 @dataclasses.dataclass
@@ -37,7 +47,7 @@ class AssessmentResult:
     counts: dict[str, dict[str, int]]   # metric -> counter -> raw count
     sketch_estimates: dict[str, float]
     n_triples: int
-    passes: int                         # data passes performed
+    passes: int                         # ACTUAL data passes performed
     exec_stats: object = None           # dist.ChunkStats when run chunked
 
     def __getitem__(self, k: str) -> float:
@@ -62,6 +72,9 @@ class QualityEvaluator:
                  fused: bool = True, backend: str = "jnp",
                  mesh: Mesh | None = None, hll_p: int = hll.DEFAULT_P,
                  interpret: bool = True):
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {backend!r}")
         self.metrics = get_metrics(metric_names)
         self.fused = fused
         self.backend = backend
@@ -73,18 +86,31 @@ class QualityEvaluator:
             else [plan_single(m) for m in self.metrics])
 
     # -- single-pass core (one plan) ------------------------------------------
-    def _pass_fn(self, pln: Plan):
-        """Build the jitted single-pass function planes -> (counts, sketches)."""
+    def _local_pass_fn(self, pln: Plan):
+        """The un-jitted single-device pass planes -> (counts, sketches).
+
+        Each branch declares its HBM data passes via ``record_scan`` (op
+        wrappers do it for the kernel paths), so tracing this function under
+        ``kernels.count_scans`` measures passes-per-execution — the hook
+        behind ``passes_per_chunk``.
+        """
         program, n_counters = pln.program, pln.n_counters
         sketch_specs = pln.sketch_specs
         backend, interpret, hll_p = self.backend, self.interpret, self.hll_p
 
         def local_pass(planes):
+            if backend == "fused_scan":
+                from ..kernels.fused_scan import ops as fops
+                counts, regs = fops.fused_scan(
+                    planes, program, n_counters, sketch_specs, hll_p,
+                    interpret=interpret)
+                return counts, regs
             if backend == "pallas":
                 from ..kernels.qap_count import ops as qops
                 counts = qops.fused_count(planes, program, n_counters,
                                           interpret=interpret)
             else:
+                record_scan(1)  # the counts scan
                 counts = _counts_jnp(planes, program, n_counters)
             regs = {}
             if sketch_specs:
@@ -92,14 +118,19 @@ class QualityEvaluator:
                 for sname, cols in sketch_specs:
                     if backend == "pallas":
                         from ..kernels.hll import ops as hops
-                        regs[sname] = hops.hll_fold(
-                            planes, cols, hll_p, valid=valid,
-                            interpret=interpret)
+                        regs[sname] = hops.hll_fold(planes, cols, hll_p,
+                                                    interpret=interpret)
                     else:
+                        record_scan(1)  # one more scan per sketch
                         regs[sname] = hll.hll_update(
                             hll.hll_init(hll_p), planes, cols, valid=valid)
             return counts, regs
 
+        return local_pass
+
+    def _pass_fn(self, pln: Plan):
+        """Build the jitted (and mesh-mapped) pass function for one plan."""
+        local_pass = self._local_pass_fn(pln)
         if self.mesh is None:
             return jax.jit(local_pass)
 
@@ -117,7 +148,7 @@ class QualityEvaluator:
         mapped = compat.shard_map(
             dist_pass, mesh=mesh,
             in_specs=(shard_rows,),
-            out_specs=(P(), {s: P() for s, _ in sketch_specs}),
+            out_specs=(P(), {s: P() for s, _ in pln.sketch_specs}),
             check_vma=False,  # pallas_call outputs carry no vma info
         )
         return jax.jit(mapped)
@@ -126,11 +157,24 @@ class QualityEvaluator:
     def _pass_fns(self):
         return [self._pass_fn(p) for p in self.plans]
 
+    @functools.cached_property
+    def passes_per_chunk(self) -> int:
+        """ACTUAL HBM data passes one chunk evaluation performs, measured by
+        tracing every plan's (local) pass function under the scan counter —
+        1 per plan for jnp/fused_scan-style fused scans, ``1 + S`` for the
+        two-kernel pallas path with S sketches."""
+        shape = jax.ShapeDtypeStruct((max(8, self._row_multiple()), N_PLANES),
+                                     jnp.int32)
+        with count_scans() as box:
+            for pln in self.plans:
+                jax.eval_shape(self._local_pass_fn(pln), shape)
+        return box[0]
+
     def _row_multiple(self) -> int:
+        per_device = 8 if self.backend in ("pallas", "fused_scan") else 1
         if self.mesh is None:
-            return 8 if self.backend == "pallas" else 1
-        return int(np.prod(self.mesh.devices.shape)) * (
-            8 if self.backend == "pallas" else 1)
+            return per_device
+        return int(np.prod(self.mesh.devices.shape)) * per_device
 
     def device_planes(self, tensor: TripleTensor):
         padded = tensor.padded_to(max(1, self._row_multiple()))
@@ -173,14 +217,25 @@ class QualityEvaluator:
             "chunks_done": set(),
         }
 
-    def eval_chunk(self, chunk: TripleTensor):
-        arr = self.device_planes(chunk)
+    def dispatch_chunk(self, arr):
+        """Launch every plan's pass over device-resident ``arr`` WITHOUT
+        blocking (JAX dispatch is async) — the device-side half of
+        ``eval_chunk``.  Pair with ``materialize_chunk``."""
+        return [fn(arr) for fn in self._pass_fns]
+
+    @staticmethod
+    def materialize_chunk(outs):
+        """Block until the dispatched passes finish and gather host numpy
+        results — the single per-chunk host synchronization point."""
         counts_out, regs_out = [], {}
-        for fn in self._pass_fns:
-            counts, regs = fn(arr)
+        for counts, regs in outs:
             counts_out.append(np.asarray(counts, np.int64))
             regs_out.update({k: np.asarray(v) for k, v in regs.items()})
         return counts_out, regs_out
+
+    def eval_chunk(self, chunk: TripleTensor):
+        arr = self.device_planes(chunk)
+        return self.materialize_chunk(self.dispatch_chunk(arr))
 
     @staticmethod
     def merge_chunk(state: dict, chunk_id: int, counts, regs) -> dict:
@@ -207,7 +262,7 @@ class QualityEvaluator:
         return AssessmentResult(values=values, counts=counts_out,
                                 sketch_estimates=est, n_triples=n_triples,
                                 passes=len(state["chunks_done"])
-                                * len(self.plans))
+                                * self.passes_per_chunk)
 
 
 def run_single_shot(evaluator: QualityEvaluator,

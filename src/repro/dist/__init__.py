@@ -9,17 +9,28 @@ properties for the JAX engine:
   ``QualityEvaluator.eval_chunk`` per chunk with bounded retries, merges
   idempotently (duplicate deliveries are ignored), and checkpoints the
   merged state so a crashed coordinator resumes without re-scanning
-  completed chunks.
+  completed chunks.  With ``prefetch > 0`` the scan is PIPELINED:
+  a producer thread ingests/tokenizes chunk ``i+1`` and ``device_put``s it
+  while the device computes chunk ``i`` (JAX dispatch is async), and the
+  only per-chunk host synchronization is one deferred materialization —
+  merge order, retry accounting, and checkpoint/resume state are
+  bit-for-bit identical to the sequential loop.
 * ``FaultInjector`` / ``WorkerFailure`` — deterministic failure injection
   (flaky workers, stragglers, coordinator crashes) for tests and drills.
 * ``compressed_psum`` — quantized cross-device mean-reduction with error
   feedback, for bandwidth-bound reductions.
 * ``sharding`` — ``ShardingPolicy`` / ``split_params`` (logical parameter
   axes → mesh shardings).
+
+Checkpoints are written through ``CheckpointManager.save_async``'s writer
+thread, so periodic checkpoints never stall the scan loop; ``run`` joins
+the writer before returning, so a completed run's state is durable.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
 from typing import Any, Iterable, Mapping, Optional
 
@@ -87,29 +98,55 @@ class ChunkStats:
     retries: int = 0
     resumed_from: Optional[int] = None  # merge count at the restored ckpt
     checkpoints_written: int = 0
+    mode: str = "sync"           # "sync" | "pipelined"
+    passes_per_chunk: int = 0    # actual HBM data passes per chunk eval
+    wall_seconds: float = 0.0    # end-to-end run() wall time
+    # per merged chunk, host-observed seconds: full eval (sync mode) or
+    # time blocked in the deferred materialization (pipelined mode — the
+    # overlap headroom is exactly what's NOT in here)
+    chunk_eval_seconds: list = dataclasses.field(default_factory=list)
+
+
+class _ProducerError:
+    """Exception raised on the prefetch thread, relayed to the consumer."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_END_OF_STREAM = object()
 
 
 class ChunkScheduler:
     """Fault-tolerant chunked execution of a quality assessment.
 
     Built on the evaluator's mergeable-chunk interface
-    (``eval_chunk``/``merge_chunk``/``finalize_state``): chunk results are
-    commutative monoid elements (counter sums + HLL register max), so any
-    arrival order, duplicate delivery, or restart yields bit-identical
-    results to a single-shot pass.
+    (``dispatch_chunk``/``materialize_chunk``/``merge_chunk``/
+    ``finalize_state``): chunk results are commutative monoid elements
+    (counter sums + HLL register max), so any arrival order, duplicate
+    delivery, or restart yields bit-identical results to a single-shot
+    pass.
+
+    ``prefetch > 0`` enables the pipelined executor: up to ``prefetch``
+    ingested+transferred chunks are buffered ahead of the device while the
+    previous chunk's materialization is deferred until the next chunk has
+    been dispatched (``prefetch=1`` is classic double buffering).
     """
 
     def __init__(self, evaluator, n_chunks: int = 16, *,
                  checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 8, max_attempts: int = 4):
+                 checkpoint_every: int = 8, max_attempts: int = 4,
+                 prefetch: int = 0):
         self.evaluator = evaluator
         self.n_chunks = n_chunks
         self.checkpoint_every = checkpoint_every
         self.max_attempts = max_attempts
+        self.prefetch = prefetch
         self._mgr = (CheckpointManager(checkpoint_dir, keep=2)
                      if checkpoint_dir else None)
         self._dataset_sig: Optional[tuple] = None  # set per run()
         self._chunk_sizes: dict[int, int] = {}   # cid -> n_valid when merged
+        self._last_saved = 0                     # merge count at last save
 
     # -- checkpoint plumbing ---------------------------------------------------
     def _compat_meta(self) -> dict:
@@ -150,8 +187,11 @@ class ChunkScheduler:
                  "chunks_done": set(done)}, step)
 
     def _save(self, merges: int, state: dict) -> None:
+        # async writer thread: the scan loop never blocks on disk (merges
+        # REPLACE state arrays rather than mutating them, so the snapshot
+        # the writer holds stays consistent)
         done = sorted(state["chunks_done"])
-        self._mgr.save(
+        self._mgr.save_async(
             merges,
             {"counts": state["counts"], "sketches": state["sketches"]},
             metadata={"chunks_done": done,
@@ -165,6 +205,7 @@ class ChunkScheduler:
         ``dataset``: a ``TripleTensor`` (split into ``n_chunks`` here) or an
         already-chunked sequence of ``TripleTensor``s (streaming ingest).
         """
+        t0 = time.perf_counter()
         ev = self.evaluator
         if hasattr(dataset, "chunks"):
             chunks: Iterable = dataset.chunks(self.n_chunks)
@@ -177,54 +218,193 @@ class ChunkScheduler:
 
         state = ev.chunk_state_init()
         state, resumed = self._restore(state)
-        stats = ChunkStats(chunks_total=chunks_total, resumed_from=resumed)
+        stats = ChunkStats(chunks_total=chunks_total, resumed_from=resumed,
+                           mode="pipelined" if self.prefetch else "sync",
+                           passes_per_chunk=ev.passes_per_chunk)
 
-        n_triples = 0
-        last_saved = len(state["chunks_done"])
-        for cid, chunk in enumerate(chunks):
-            stats.chunks_total = max(stats.chunks_total, cid + 1)
-            n_triples += len(chunk)
-            if cid in state["chunks_done"]:
-                # already merged before a restart — but only if it is the
-                # SAME chunk; a differently-split stream must not resume
-                expected = self._chunk_sizes.get(cid)
-                if expected is not None and expected != len(chunk):
-                    raise ValueError(
-                        f"chunk {cid} has {len(chunk)} triples but the "
-                        f"checkpoint recorded {expected}; the dataset is "
-                        f"chunked differently — use a fresh checkpoint_dir")
-                continue
-            self._chunk_sizes[cid] = len(chunk)
-            counts = regs = None
-            for attempt in range(self.max_attempts):
-                try:
-                    stats.attempts += 1
-                    if faults is not None:
-                        faults.on_eval(cid)
-                    counts, regs = ev.eval_chunk(chunk)
-                    break
-                except WorkerFailure:
-                    stats.retries += 1
-                    if attempt == self.max_attempts - 1:
-                        raise
-            state = ev.merge_chunk(state, cid, counts, regs)
-            merges = len(state["chunks_done"])
-            if (self._mgr is not None and self.checkpoint_every
-                    and merges % self.checkpoint_every == 0):
-                self._save(merges, state)
-                stats.checkpoints_written += 1
-                last_saved = merges
-            if faults is not None:
-                faults.on_merge(merges)
+        self._last_saved = len(state["chunks_done"])
+        loop = self._run_pipelined if self.prefetch else self._run_sync
+        try:
+            n_triples = loop(chunks, state, stats, faults)
+        finally:
+            if self._mgr is not None:
+                # join the async writer even when the coordinator crashes:
+                # the last submitted snapshot must land for resume to work
+                self._mgr.wait()
 
         merges = len(state["chunks_done"])
-        if self._mgr is not None and merges > last_saved:
+        if self._mgr is not None and merges > self._last_saved:
             # final checkpoint: a completed run always persists its state,
             # even when n_chunks never aligned with checkpoint_every
             self._save(merges, state)
             stats.checkpoints_written += 1
+            self._mgr.wait()  # durable before run() returns
 
+        stats.wall_seconds = time.perf_counter() - t0
         return ev.finalize_state(state, n_triples), stats
+
+    # -- shared loop pieces ----------------------------------------------------
+    def _skip_done(self, state: dict, cid: int, n: int) -> bool:
+        """True if ``cid`` was merged before a restart — but only if it is
+        the SAME chunk; a differently-split stream must not resume."""
+        if cid not in state["chunks_done"]:
+            return False
+        expected = self._chunk_sizes.get(cid)
+        if expected is not None and expected != n:
+            raise ValueError(
+                f"chunk {cid} has {n} triples but the checkpoint recorded "
+                f"{expected}; the dataset is chunked differently — use a "
+                f"fresh checkpoint_dir")
+        return True
+
+    def _attempt(self, fn, cid: int, stats: ChunkStats,
+                 faults: Optional[FaultInjector],
+                 budget: Optional[int] = None):
+        """Run ``fn`` with bounded retries and fault injection.  ``budget``
+        caps the tries (default ``max_attempts``) so callers that already
+        burned failures can keep the per-chunk total identical."""
+        budget = self.max_attempts if budget is None else budget
+        for attempt in range(budget):
+            try:
+                stats.attempts += 1
+                if faults is not None:
+                    faults.on_eval(cid)
+                return fn()
+            except WorkerFailure:
+                stats.retries += 1
+                if attempt == budget - 1:
+                    raise
+
+    def _merge_and_checkpoint(self, state: dict, cid: int, counts, regs,
+                              stats: ChunkStats,
+                              faults: Optional[FaultInjector]) -> None:
+        self.evaluator.merge_chunk(state, cid, counts, regs)
+        merges = len(state["chunks_done"])
+        if (self._mgr is not None and self.checkpoint_every
+                and merges % self.checkpoint_every == 0):
+            self._save(merges, state)
+            stats.checkpoints_written += 1
+            self._last_saved = merges
+        if faults is not None:
+            faults.on_merge(merges)
+
+    def _run_sync(self, chunks, state, stats, faults) -> int:
+        """The sequential loop: ingest → transfer → compute → sync, one
+        chunk at a time."""
+        ev = self.evaluator
+        n_triples = 0
+        for cid, chunk in enumerate(chunks):
+            stats.chunks_total = max(stats.chunks_total, cid + 1)
+            n_triples += len(chunk)
+            if self._skip_done(state, cid, len(chunk)):
+                continue
+            self._chunk_sizes[cid] = len(chunk)
+            t0 = time.perf_counter()
+            counts, regs = self._attempt(
+                lambda: ev.eval_chunk(chunk), cid, stats, faults)
+            stats.chunk_eval_seconds.append(time.perf_counter() - t0)
+            self._merge_and_checkpoint(state, cid, counts, regs, stats,
+                                       faults)
+        return n_triples
+
+    def _run_pipelined(self, chunks, state, stats, faults) -> int:
+        """Double-buffered async executor.
+
+        A producer thread drains the chunk source (host ingest/tokenization
+        — NumPy, which releases the GIL) and ``device_put``s each chunk; the
+        consumer dispatches compute on chunk *i* (async, non-blocking) and
+        only THEN materializes chunk *i-1*'s results — so tokenize/transfer
+        of the next chunk, device compute of this chunk, and host merge of
+        the previous one all overlap.  Merge order, retries, and checkpoint
+        cadence are identical to ``_run_sync``.
+        """
+        ev = self.evaluator
+        q: queue_mod.Queue = queue_mod.Queue(maxsize=max(1, self.prefetch))
+        stop = threading.Event()
+        done_at_start = frozenset(state["chunks_done"])
+
+        def _put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue_mod.Full:
+                    continue
+            return False
+
+        def produce():
+            try:
+                for cid, chunk in enumerate(chunks):
+                    arr = (None if cid in done_at_start
+                           else ev.device_planes(chunk))
+                    if not _put((cid, len(chunk), arr)):
+                        return
+                _put(_END_OF_STREAM)
+            except BaseException as e:  # relay ingest failures
+                _put(_ProducerError(e))
+
+        producer = threading.Thread(target=produce, daemon=True,
+                                    name="chunk-prefetch")
+        producer.start()
+        n_triples = 0
+        pending = None  # (cid, dispatched-but-unmaterialized outputs)
+        try:
+            while True:
+                item = q.get()
+                if isinstance(item, _ProducerError):
+                    raise item.exc
+                if item is _END_OF_STREAM:
+                    break
+                cid, n, arr = item
+                stats.chunks_total = max(stats.chunks_total, cid + 1)
+                n_triples += n
+                if self._skip_done(state, cid, n):
+                    continue
+                self._chunk_sizes[cid] = n
+                before = stats.attempts
+                outs = self._attempt(
+                    lambda: ev.dispatch_chunk(arr), cid, stats, faults)
+                if pending is not None:
+                    self._finish_pending(pending, state, stats, faults)
+                # carry the attempts this chunk has already consumed, so a
+                # later materialize failure draws from the SAME budget
+                pending = (cid, outs, arr, stats.attempts - before)
+            if pending is not None:
+                self._finish_pending(pending, state, stats, faults)
+        finally:
+            stop.set()
+            while True:  # unblock a producer stuck on a full queue
+                try:
+                    q.get_nowait()
+                except queue_mod.Empty:
+                    break
+            producer.join(timeout=10.0)
+        return n_triples
+
+    def _finish_pending(self, pending, state, stats, faults) -> None:
+        # JAX dispatch is async, so a real compute failure surfaces HERE
+        # (at host sync), not at dispatch — retry by re-dispatching from
+        # the still-device-resident planes, matching _run_sync's coverage
+        # where the whole eval (dispatch + sync) sits inside the retry loop
+        ev = self.evaluator
+        cid, outs, arr, used = pending
+        t0 = time.perf_counter()
+        try:
+            counts, regs = ev.materialize_chunk(outs)
+        except WorkerFailure:
+            # the dispatch that produced ``outs`` was attempt number
+            # ``used``; its materialization failing fails THAT attempt, so
+            # the recovery budget is what's left of max_attempts — a chunk
+            # aborts after the same total failures as in _run_sync no
+            # matter where in dispatch/materialize they strike
+            stats.retries += 1
+            if self.max_attempts - used <= 0:
+                raise
+            counts, regs = self._attempt(
+                lambda: ev.materialize_chunk(ev.dispatch_chunk(arr)),
+                cid, stats, faults, budget=self.max_attempts - used)
+        stats.chunk_eval_seconds.append(time.perf_counter() - t0)
+        self._merge_and_checkpoint(state, cid, counts, regs, stats, faults)
 
 
 # --- compressed collectives ---------------------------------------------------

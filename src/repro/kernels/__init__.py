@@ -3,7 +3,65 @@
 * ``qap_count`` — fused multi-metric predicate+count scan (the paper's metric
   evaluation loop, one HBM pass for all metrics).
 * ``hll`` — HyperLogLog register update (distinct-count actions).
+* ``fused_scan`` — the one-true-pass megakernel: counter bytecode AND every
+  HLL sketch's register bank updated per VMEM-resident block, so sketch
+  metrics no longer cost one extra HBM scan each.
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
 on CPU with interpret=True against pure numpy/jnp oracles in ``*/ref.py``.
+
+Pass accounting
+---------------
+Every op wrapper that launches a kernel (or jnp scan) streaming the full
+planes tensor HBM→VMEM once calls ``record_scan()``.  Wrappers run at trace
+time, so tracing one pass function under ``count_scans()`` counts its HBM
+data passes per execution — the hook behind
+``QualityEvaluator.passes_per_chunk`` and the pass-count assertions in
+``tests/test_qa.py``.
 """
+from __future__ import annotations
+
+import contextlib
+import threading
+
+# VMEM budget for the dense (rows, 2^p) one-hot scatter-max intermediate —
+# the HLL kernels' sizing constraint (TPUs have no VPU scatter).  One
+# policy for both the standalone ``hll`` fold and the ``fused_scan``
+# megakernel's internal row tiling: 4 MiB fits a 16 MiB/core VMEM
+# alongside the input block, accumulators, and the unrolled mask stack.
+ONEHOT_VMEM_BYTES = 4 << 20
+
+
+def onehot_row_cap(p: int) -> int:
+    """Largest 8-multiple row count whose (rows, 2^p) int32 one-hot fits
+    the VMEM budget (floors at the 8-row tile: p=12 → 256, p=14 → 64)."""
+    return max(8, (ONEHOT_VMEM_BYTES // (4 << p)) // 8 * 8)
+
+
+class _ScanCounter(threading.local):
+    active = False
+    count = 0
+
+
+_scans = _ScanCounter()
+
+
+def record_scan(n: int = 1) -> None:
+    """Declare ``n`` full passes over the planes tensor (called by op
+    wrappers at trace time; a no-op unless inside ``count_scans()``)."""
+    if _scans.active:
+        _scans.count += n
+
+
+@contextlib.contextmanager
+def count_scans():
+    """Count ``record_scan`` calls in this thread; yields a 1-element list
+    whose slot holds the running (and, on exit, final) count."""
+    prev_active, prev_count = _scans.active, _scans.count
+    _scans.active, _scans.count = True, 0
+    box = [0]
+    try:
+        yield box
+        box[0] = _scans.count
+    finally:
+        _scans.active, _scans.count = prev_active, prev_count

@@ -1,0 +1,2 @@
+from .ops import fused_scan  # noqa: F401
+from .ref import fused_scan_jnp  # noqa: F401

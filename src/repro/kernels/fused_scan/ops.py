@@ -1,0 +1,40 @@
+"""jit'd public wrapper for the fused counts+sketches megakernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...rdf.triple_tensor import COL_S_FLAGS
+from .. import ONEHOT_VMEM_BYTES, record_scan
+from .. import onehot_row_cap as onehot_rows_for  # shared VMEM policy
+from ..qap_count.ops import fused_count
+from .kernel import fused_scan_kernel
+
+
+def fused_scan(planes, program, n_counters: int,
+               sketch_specs: tuple[tuple[str, tuple[int, ...]], ...],
+               p: int, *, block_n: int = 8192, interpret: bool = True):
+    """ONE pass over (N, P) planes → ((n_counters,) int32 counts,
+    {sketch name: (2^p,) int32 registers}).
+
+    Pads N up to a block multiple with zero rows — zero flag planes carry
+    no VALID/KIND bits, so padding is invisible to every counter, and the
+    kernel zeroes padded rows' ranks (s_flags == 0 ⇒ not a real row) so
+    registers match the unpadded fold bit-for-bit.
+    """
+    if not sketch_specs:        # pure-counter plan: the qap_count kernel IS
+        return (fused_count(planes, program, n_counters, block_n=block_n,
+                            interpret=interpret), {})  # the one-pass scan
+    record_scan(1)
+    n = planes.shape[0]
+    if n < block_n:  # shrink for tiny inputs, keep (8,128)-tile alignment
+        block_n = max(8, ((n + 7) // 8) * 8)
+    pad = (-n) % block_n
+    if pad:
+        planes = jnp.pad(planes, ((0, pad), (0, 0)))
+    counts, regs = fused_scan_kernel(
+        planes, program=program, n_counters=n_counters,
+        sketch_cols=tuple(cols for _, cols in sketch_specs), p=p,
+        valid_plane=COL_S_FLAGS, block_n=block_n,
+        rows_tile=min(block_n, onehot_rows_for(p)), interpret=interpret)
+    return counts[:n_counters], {name: r for (name, _), r
+                                 in zip(sketch_specs, regs)}

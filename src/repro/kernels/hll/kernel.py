@@ -6,9 +6,9 @@ scatter-max in the VPU, so the kernel uses the dense one-hot formulation:
 
     regs_block[m] = max_i rank[i] * [bucket[i] == m]
 
-The (BLOCK_N, M) intermediate is the VMEM sizing constraint: with
-BLOCK_N=1024 and p=12 (M=4096) it is 1024×4096×4B = 16 MiB — the block is
-tiled so it stays inside VMEM; rows stream HBM→VMEM once. Registers are an
+The (BLOCK_N, M) intermediate is the VMEM sizing constraint — the ops
+wrapper derives BLOCK_N from p (``ops.bounded_block_n``) so it stays inside
+a fixed VMEM budget at any p; rows stream HBM→VMEM once. Registers are an
 (M//128, 128) int32 accumulator block reused across grid steps (init at step
 0, max-merge afterwards) — merging is associative, which is exactly what the
 fault-tolerance layer relies on.
@@ -32,6 +32,12 @@ def _fmix32(x):
     return x
 
 
+# the bucket/rank split is shape-generic pure jnp — reuse the ONE
+# derivation from core/sketches so the kernels and the jnp scatter path
+# cannot diverge (the megakernel imports it from here too)
+from ...core.sketches import rank_and_bucket as _bucket_rank
+
+
 def _kernel(planes_ref, regs_ref, *, cols, p, valid_plane):
     step = pl.program_id(0)
 
@@ -49,11 +55,7 @@ def _kernel(planes_ref, regs_ref, *, cols, p, valid_plane):
         h = h * jnp.uint32(5) + jnp.uint32(0xE6546B64)
     h = _fmix32(h)
 
-    bucket = (h >> (32 - p)).astype(jnp.int32)        # (BLOCK_N, 1)
-    w = (h << p).astype(jnp.uint32)
-    max_rank = 32 - p + 1
-    rank = jnp.where(w == 0, max_rank, jax.lax.clz(w).astype(jnp.int32) + 1)
-    rank = jnp.minimum(rank, max_rank)
+    bucket, rank = _bucket_rank(h, p)                 # (BLOCK_N, 1) each
     if valid_plane is not None:
         rank = jnp.where(block[:, valid_plane:valid_plane + 1] != 0, rank, 0)
 

@@ -4,18 +4,27 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ...rdf.triple_tensor import COL_S_FLAGS
+from .. import ONEHOT_VMEM_BYTES, onehot_row_cap, record_scan
 from .kernel import hll_fold_kernel
 
 
-def hll_fold(planes, cols: tuple[int, ...], p: int, *, valid=None,
+def bounded_block_n(p: int, block_n: int) -> int:
+    """Cap ``block_n`` so the (BLOCK_N, 2^p) int32 one-hot fits the shared
+    VMEM budget at ANY ``p`` (the un-capped default of 1024 rows at p=14
+    would be 64 MiB)."""
+    return min(block_n, onehot_row_cap(p))
+
+
+def hll_fold(planes, cols: tuple[int, ...], p: int, *,
              block_n: int = 1024, interpret: bool = True):
     """Fold (N, P) planes into (2^p,) HLL registers.
 
-    ``valid`` is accepted for API parity with the jnp path but the kernel
-    derives validity from the s_flags plane directly (zero ⇒ padding row),
-    avoiding a second streamed input.
+    Row validity is derived from the s_flags plane directly (zero ⇒ padding
+    row), avoiding a second streamed input; this matches the jnp path's
+    ``valid = planes[:, COL_S_FLAGS] != 0``.
     """
-    del valid
+    record_scan(1)
+    block_n = bounded_block_n(p, block_n)
     n = planes.shape[0]
     if n < block_n:
         block_n = max(8, ((n + 7) // 8) * 8)

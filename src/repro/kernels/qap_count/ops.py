@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .. import record_scan
 from .kernel import COUNTS_WIDTH, fused_count_kernel
 
 
@@ -13,6 +14,7 @@ def fused_count(planes, program, n_counters: int, *, block_n: int = 8192,
     Pads N up to a block multiple with zero rows — zero flag planes carry no
     VALID/KIND bits, so padding is invisible to every well-formed predicate.
     """
+    record_scan(1)
     n = planes.shape[0]
     if n < block_n:  # shrink for tiny inputs, keep (8,128)-tile row alignment
         block_n = max(8, ((n + 7) // 8) * 8)

@@ -21,7 +21,11 @@ def main():
     ap.add_argument("--synthetic", type=int, default=0,
                     help="assess N synthetic triples instead of a file")
     ap.add_argument("--metrics", default="all", help="'paper' | 'all' | csv")
-    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--backend", choices=["jnp", "pallas", "fused_scan"],
+                    default="jnp",
+                    help="jnp: XLA masks; pallas: two-kernel scan (1+S "
+                         "passes with S sketches); fused_scan: one-pass "
+                         "counts+sketches megakernel")
     ap.add_argument("--no-fused", action="store_true",
                     help="paper-faithful one-pass-per-metric mode")
     ap.add_argument("--chunks", type=int, default=0,
@@ -30,6 +34,10 @@ def main():
     ap.add_argument("--stream", type=int, default=0, metavar="TRIPLES",
                     help=">0: bounded-memory streaming ingest of --nt, "
                          "yielding chunks of this many triples")
+    ap.add_argument("--prefetch", type=int, default=0, metavar="N",
+                    help=">0: async pipelined chunk executor — ingest + "
+                         "transfer of the next chunk overlap device "
+                         "compute (1 = double buffering)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--dqv", action="store_true", help="emit DQV JSON-LD")
     args = ap.parse_args()
@@ -46,6 +54,8 @@ def main():
     if args.stream:
         pipe = pipe.streamed(args.stream,
                              checkpoint_dir=args.checkpoint_dir)
+    if args.prefetch:
+        pipe = pipe.pipelined(args.prefetch)
     if args.base:
         pipe = pipe.base(*args.base)
 
@@ -65,8 +75,12 @@ def main():
 
     if res.exec_stats is not None:
         s = res.exec_stats
+        evals = s.chunk_eval_seconds
         print(f"# chunks={s.chunks_total} attempts={s.attempts} "
-              f"resumed_from={s.resumed_from}", file=sys.stderr)
+              f"resumed_from={s.resumed_from} mode={s.mode} "
+              f"passes/chunk={s.passes_per_chunk} "
+              f"host-blocked {sum(evals):.2f}s of {s.wall_seconds:.2f}s wall",
+              file=sys.stderr)
     print(f"# {res.n_triples:,} triples | prep {t_ingest:.2f}s | "
           f"eval {t_eval:.2f}s | {res.passes} pass(es)", file=sys.stderr)
     if args.dqv:

@@ -30,7 +30,7 @@ from ..dist import ChunkScheduler
 from ..rdf import TripleTensor
 from ..rdf import ingest as rdf_ingest
 
-BACKENDS = ("jnp", "pallas")
+BACKENDS = ("jnp", "pallas", "fused_scan")
 
 METRIC_ALIASES = {
     "paper": PAPER_METRICS,
@@ -54,6 +54,7 @@ class ExecutionConfig:
     interpret: bool = True             # pallas interpret mode (CPU hosts)
     hll_p: int = hll.DEFAULT_P
     stream_triples: int = 0            # >0: streaming ingest chunk size
+    prefetch: int = 0                  # >0: async pipelined chunk executor
 
     def __post_init__(self):
         # validate here so every construction path (fluent, qa.assess
@@ -67,6 +68,8 @@ class ExecutionConfig:
         if self.stream_triples < 0:
             raise ValueError(
                 f"stream_triples must be >= 0, got {self.stream_triples}")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
 
 
 def _resolve_metrics(spec) -> tuple[str, ...]:
@@ -172,6 +175,17 @@ class Pipeline:
             kw["checkpoint_every"] = checkpoint_every
         return self._exec(**kw)
 
+    def pipelined(self, prefetch: int = 1) -> "Pipeline":
+        """Async double-buffered chunk executor: ingest/tokenization and
+        host→device transfer of chunk *i+1* overlap with device compute on
+        chunk *i*; host sync is one deferred per-chunk materialization.
+        ``prefetch`` bounds how many ready chunks may wait ahead of the
+        device (1 = classic double buffering).  Results are bit-identical
+        to the sequential loop; applies to chunked/streamed runs
+        (single-shot runs have nothing to overlap).  ``prefetch=0``
+        restores the sequential executor."""
+        return self._exec(prefetch=int(prefetch))
+
     def single_shot(self) -> "Pipeline":
         return self._exec(chunks=0, checkpoint_dir=None, stream_triples=0)
 
@@ -211,7 +225,8 @@ class Pipeline:
         return ChunkScheduler(self.evaluator(),
                               n_chunks=self.exec.chunks or 16,
                               checkpoint_dir=self.exec.checkpoint_dir,
-                              checkpoint_every=self.exec.checkpoint_every)
+                              checkpoint_every=self.exec.checkpoint_every,
+                              prefetch=self.exec.prefetch)
 
     # -- ingest ----------------------------------------------------------------
     def _encode(self, text: str) -> TripleTensor:
@@ -279,6 +294,8 @@ class Pipeline:
         mode = (f"chunked×{e.chunks}" if e.chunks else "single-shot")
         if e.stream_triples:
             mode += f" streamed@{e.stream_triples}"
+        if e.prefetch:
+            mode += f" async×{e.prefetch}"
         if e.checkpoint_dir:
             mode += f" ckpt={e.checkpoint_dir}"
         mesh = (f" mesh={tuple(e.mesh.axis_names)}" if e.mesh is not None

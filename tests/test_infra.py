@@ -42,6 +42,26 @@ def test_checkpoint_async():
         np.testing.assert_array_equal(out["x"], tree["x"])
 
 
+def test_checkpoint_async_write_failure_propagates():
+    """A failed background write must raise on the caller's thread at
+    wait() — otherwise the scheduler reports durable checkpoints that
+    never landed."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        blocker = os.path.join(d, "blocker")
+        with open(blocker, "w") as f:
+            f.write("x")
+        mgr.directory = os.path.join(blocker, "sub")  # mkdir under a FILE
+        mgr.save_async(1, {"a": np.ones(3)})
+        with pytest.raises(OSError):
+            mgr.wait()
+        # the failure is reported once, then the manager is usable again
+        mgr.directory = d
+        mgr.save_async(2, {"a": np.ones(3)})
+        mgr.wait()
+        assert mgr.all_steps() == [2]
+
+
 def test_checkpoint_missing_key_raises():
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d)

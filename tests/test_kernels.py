@@ -12,8 +12,10 @@ except ImportError:  # property tests skip; deterministic sweeps still run
 import jax.numpy as jnp
 
 from repro.core import expr as E
+from repro.core import sketches as hll
 from repro.core.planner import plan
 from repro.core.metrics import get_metrics, ALL_METRICS
+from repro.kernels.fused_scan import ops as fops, ref as fref
 from repro.kernels.hll import ops as hops, ref as href
 from repro.kernels.qap_count import ops as qops, ref as qref
 from repro.rdf import synth_encoded
@@ -119,6 +121,127 @@ def _check_hll_accuracy(true_card):
     est = href.hll_estimate_ref(regs)
     rel = abs(est - true_card) / true_card
     assert rel < 5 * 1.04 / np.sqrt(1 << p), (est, true_card, rel)
+
+
+def test_hll_block_n_bounded_by_p():
+    """The (BLOCK_N, 2^p) one-hot intermediate must stay inside the VMEM
+    budget at any p (p=14 at the old 1024-row default was 64 MiB)."""
+    for p in (8, 12, 14, 18):
+        bn = hops.bounded_block_n(p, 1024)
+        assert bn * (4 << p) <= hops.ONEHOT_VMEM_BYTES or bn == 8, (p, bn)
+        assert bn % 8 == 0 and bn >= 8
+    assert hops.bounded_block_n(14, 1024) == 64
+    # ... and the bounded kernel still matches the oracle at large p
+    tt = synth_encoded(5000, seed=2)
+    got = np.asarray(hops.hll_fold(jnp.asarray(tt.planes), (COL_S,), 14))
+    want = href.hll_fold_ref(tt.planes, (COL_S,), 14,
+                             valid=tt.planes[:, COL_S_FLAGS] != 0)
+    np.testing.assert_array_equal(got, want)
+
+
+# --- fused counts+sketches megakernel ------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 8, 100, 8193, 20000])
+@pytest.mark.parametrize("p", [8, 12, 14])
+def test_fused_scan_counts_and_registers(n, p):
+    """ONE kernel pass must reproduce the qap_count counters AND every
+    sketch's hll_fold registers bit-for-bit."""
+    tt = synth_encoded(n, seed=n + p)
+    planes = jnp.asarray(tt.planes)
+    counts, regs = fops.fused_scan(planes, FULL_PLAN.program,
+                                   FULL_PLAN.n_counters,
+                                   FULL_PLAN.sketch_specs, p)
+    want_counts = qref.counts_ref_np(tt.planes, FULL_PLAN.program,
+                                     FULL_PLAN.n_counters)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  want_counts.astype(np.int32))
+    valid = tt.planes[:, COL_S_FLAGS] != 0
+    assert set(regs) == {s for s, _ in FULL_PLAN.sketch_specs}
+    for sname, cols in FULL_PLAN.sketch_specs:
+        want = href.hll_fold_ref(tt.planes, cols, p, valid=valid)
+        np.testing.assert_array_equal(np.asarray(regs[sname]), want, sname)
+
+
+def test_fused_scan_matches_jnp_reference_path():
+    tt = synth_encoded(6000, seed=9)
+    planes = jnp.asarray(tt.planes)
+    counts, regs = fops.fused_scan(planes, FULL_PLAN.program,
+                                   FULL_PLAN.n_counters,
+                                   FULL_PLAN.sketch_specs, 12)
+    jc, jr = fref.fused_scan_jnp(planes, FULL_PLAN.program,
+                                 FULL_PLAN.n_counters,
+                                 FULL_PLAN.sketch_specs, 12)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(jc))
+    for k in jr:
+        np.testing.assert_array_equal(np.asarray(regs[k]),
+                                      np.asarray(jr[k]), k)
+
+
+def test_fused_scan_onehot_tile_is_vmem_bounded():
+    for p in (8, 12, 14, 18):
+        rt = fops.onehot_rows_for(p)
+        assert rt * (4 << p) <= fops.ONEHOT_VMEM_BYTES or rt == 8, (p, rt)
+        assert rt % 8 == 0 and rt >= 8
+
+
+def test_fused_scan_no_sketches_delegates():
+    """A sketch-free plan goes through the qap_count kernel — still one
+    pass, empty register dict."""
+    from repro.core.metrics import PAPER_METRICS
+    pln = plan(get_metrics(PAPER_METRICS))
+    assert not pln.sketch_specs
+    tt = synth_encoded(3000, seed=1)
+    counts, regs = fops.fused_scan(jnp.asarray(tt.planes), pln.program,
+                                   pln.n_counters, pln.sketch_specs, 12)
+    assert regs == {}
+    np.testing.assert_array_equal(
+        np.asarray(counts),
+        qref.counts_ref_np(tt.planes, pln.program,
+                           pln.n_counters).astype(np.int32))
+
+
+def _random_planes(rng, n):
+    """Adversarial plane tensor: arbitrary int32 ids, random validity."""
+    planes = rng.integers(-2**31, 2**31 - 1, size=(n, N_PLANES),
+                          dtype=np.int64).astype(np.int32)
+    planes[:, COL_S_FLAGS] = rng.integers(0, 2, size=n, dtype=np.int32) \
+        * rng.integers(1, 1 << 14, size=n, dtype=np.int32)
+    return planes
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 2000), p=st.integers(6, 14),
+           seed=st.integers(0, 10**6),
+           cols=st.lists(st.integers(0, N_PLANES - 1), min_size=1,
+                         max_size=3, unique=True))
+    def test_fused_scan_hash_and_registers_match_sketches(n, p, seed, cols):
+        _check_fused_scan_vs_sketches(n, p, seed, tuple(cols))
+else:
+    @pytest.mark.parametrize("n,p,seed,cols", [
+        (1, 6, 0, (COL_S,)), (173, 12, 3, (COL_S, COL_P, COL_O)),
+        (2000, 14, 9, (COL_P, COL_O)), (64, 8, 5, (COL_O,))])
+    def test_fused_scan_hash_and_registers_match_sketches_fixed(
+            n, p, seed, cols):
+        _check_fused_scan_vs_sketches(n, p, seed, cols)
+
+
+def _check_fused_scan_vs_sketches(n, p, seed, cols):
+    """Megakernel registers ≡ core/sketches.py (the jnp scatter path) on
+    adversarial inputs — same murmur chain, same rank/bucket split."""
+    planes_np = _random_planes(np.random.default_rng(seed), n)
+    planes = jnp.asarray(planes_np)
+    program = E.compile_program([E.AnyBits(COL_S_FLAGS, (1 << 15) - 1)])
+    specs = (("x", cols),)
+    _, regs = fops.fused_scan(planes, program, 1, specs, p)
+    valid = planes_np[:, COL_S_FLAGS] != 0
+    want = hll.hll_update(hll.hll_init(p), planes, cols,
+                          valid=jnp.asarray(valid))
+    np.testing.assert_array_equal(np.asarray(regs["x"]), np.asarray(want))
+    # triangulate the shared-hash chain itself against core/sketches
+    h_kernel = href.hash_columns_np(planes_np, cols)
+    h_core = np.asarray(hll.hash_columns(planes, tuple(cols)))
+    np.testing.assert_array_equal(h_kernel, h_core)
 
 
 def test_hll_merge_idempotent_associative():

@@ -57,10 +57,16 @@ def test_hand_counts(tensor, evaluator):
 
 
 def test_fused_equals_paper_mode(tensor):
-    fused = QualityEvaluator(ALL_METRICS, fused=True).assess(tensor)
-    unfused = QualityEvaluator(ALL_METRICS, fused=False).assess(tensor)
-    assert fused.passes == 1
-    assert unfused.passes == len(ALL_METRICS)
+    ev_fused = QualityEvaluator(ALL_METRICS, fused=True)
+    ev_paper = QualityEvaluator(ALL_METRICS, fused=False)
+    fused = ev_fused.assess(tensor)
+    unfused = ev_paper.assess(tensor)
+    # ALL_METRICS carries 2 HLL sketches; on the jnp path each costs one
+    # extra scan on top of the counter pass(es) — reported honestly
+    n_sketches = len(ev_fused._all_sketch_specs())
+    assert n_sketches == 2
+    assert fused.passes == 1 + n_sketches
+    assert unfused.passes == len(ALL_METRICS) + n_sketches
     for k in fused.values:
         assert fused.values[k] == pytest.approx(unfused.values[k])
 

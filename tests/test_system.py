@@ -18,8 +18,9 @@ def test_end_to_end_pipeline():
     nt = bsbm_ntriples(80, seed=13)
     tt = encode_ntriples(nt, base_namespaces=BASE_NS)
     assert len(tt) > 200
-    # step 4: metric evaluation (fused single pass over all metrics)
-    ev = QualityEvaluator(ALL_METRICS, fused=True, backend="pallas")
+    # step 4: metric evaluation — the fused_scan megakernel really is ONE
+    # pass over the planes, sketch metrics included
+    ev = QualityEvaluator(ALL_METRICS, fused=True, backend="fused_scan")
     res = ev.assess(tt)
     assert res.passes == 1
     assert res.values["L1"] == 1.0          # BSBM data carries a license
