@@ -18,4 +18,18 @@ trap 'rm -rf "$ckpt"' EXIT
 python -m repro.launch.assess --synthetic 20000 --metrics paper \
     --chunks 4 --checkpoint-dir "$ckpt"
 
+echo "== CLI smoke: incremental store (cold, then warm reuse) =="
+python - <<'PY'
+from repro.rdf import bsbm_ntriples
+with open("/tmp/check_store.nt", "w") as f:
+    f.write(bsbm_ntriples(400, seed=0))
+PY
+python -m repro.launch.assess --nt /tmp/check_store.nt \
+    --base http://bsbm.example.org/ --metrics paper \
+    --store "$ckpt/qstore" --segment-bytes 16384
+python -m repro.launch.assess --nt /tmp/check_store.nt \
+    --base http://bsbm.example.org/ --metrics paper \
+    --store "$ckpt/qstore" --segment-bytes 16384
+rm -f /tmp/check_store.nt
+
 echo "OK"

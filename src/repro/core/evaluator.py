@@ -49,6 +49,10 @@ class AssessmentResult:
     n_triples: int
     passes: int                         # ACTUAL data passes performed
     exec_stats: object = None           # dist.ChunkStats when run chunked
+    # merged HLL register banks (sketch name -> int32 array); exposed so
+    # exactness can be asserted at the register level, not just on the
+    # derived estimates
+    registers: dict = dataclasses.field(default_factory=dict)
 
     def __getitem__(self, k: str) -> float:
         return self.values[k]
@@ -262,7 +266,9 @@ class QualityEvaluator:
         return AssessmentResult(values=values, counts=counts_out,
                                 sketch_estimates=est, n_triples=n_triples,
                                 passes=len(state["chunks_done"])
-                                * self.passes_per_chunk)
+                                * self.passes_per_chunk,
+                                registers={k: np.asarray(v) for k, v
+                                           in state["sketches"].items()})
 
 
 def run_single_shot(evaluator: QualityEvaluator,

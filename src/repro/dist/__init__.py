@@ -32,7 +32,8 @@ import dataclasses
 import queue as queue_mod
 import threading
 import time
-from typing import Any, Iterable, Mapping, Optional
+import warnings
+from typing import Any, Callable, Iterable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +106,14 @@ class ChunkStats:
     # time blocked in the deferred materialization (pipelined mode — the
     # overlap headroom is exactly what's NOT in here)
     chunk_eval_seconds: list = dataclasses.field(default_factory=list)
+    # chunk ids whose eval time exceeded straggler_factor × the running
+    # median of chunk_eval_seconds (see ChunkScheduler.straggler_factor)
+    stragglers: list = dataclasses.field(default_factory=list)
+    # incremental (segment-store) runs: reuse accounting, see repro.store
+    segments_reused: int = 0
+    segments_rescanned: int = 0
+    bytes_total: int = 0
+    bytes_rescanned: int = 0
 
 
 class _ProducerError:
@@ -136,12 +145,21 @@ class ChunkScheduler:
     def __init__(self, evaluator, n_chunks: int = 16, *,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 8, max_attempts: int = 4,
-                 prefetch: int = 0):
+                 prefetch: int = 0, straggler_factor: float = 4.0,
+                 on_chunk: Optional[Callable] = None):
         self.evaluator = evaluator
         self.n_chunks = n_chunks
         self.checkpoint_every = checkpoint_every
         self.max_attempts = max_attempts
         self.prefetch = prefetch
+        # flag chunks slower than straggler_factor × the running median of
+        # per-chunk eval seconds (0/None disables detection)
+        self.straggler_factor = straggler_factor
+        # called as on_chunk(cid, counts, regs) exactly once per NEWLY
+        # merged chunk (duplicate deliveries and resumed chunks are not
+        # re-reported) — the segment store uses this to freeze per-chunk
+        # partial states without re-evaluating them
+        self.on_chunk = on_chunk
         self._mgr = (CheckpointManager(checkpoint_dir, keep=2)
                      if checkpoint_dir else None)
         self._dataset_sig: Optional[tuple] = None  # set per run()
@@ -240,6 +258,12 @@ class ChunkScheduler:
             stats.checkpoints_written += 1
             self._mgr.wait()  # durable before run() returns
 
+        if stats.stragglers:
+            warnings.warn(
+                f"straggler chunks {stats.stragglers}: eval exceeded "
+                f"{self.straggler_factor}x the running median of "
+                f"{len(stats.chunk_eval_seconds)} chunk eval times",
+                RuntimeWarning, stacklevel=2)
         stats.wall_seconds = time.perf_counter() - t0
         return ev.finalize_state(state, n_triples), stats
 
@@ -275,10 +299,32 @@ class ChunkScheduler:
                 if attempt == budget - 1:
                     raise
 
+    # ignore sub-this "stragglers": with micro-chunks the median is so
+    # small that scheduler jitter trips the ratio test constantly
+    STRAGGLER_MIN_SECONDS = 0.05
+
+    def _note_eval_time(self, cid: int, secs: float,
+                        stats: ChunkStats) -> None:
+        """Record one chunk's host-observed eval seconds and flag it as a
+        straggler when it exceeds ``straggler_factor ×`` the running median
+        (needs ≥ 3 samples so early chunks can't define the baseline)."""
+        stats.chunk_eval_seconds.append(secs)
+        if not self.straggler_factor or secs < self.STRAGGLER_MIN_SECONDS:
+            return
+        times = stats.chunk_eval_seconds
+        if len(times) < 3:
+            return
+        med = float(np.median(times))
+        if med > 0.0 and secs > self.straggler_factor * med:
+            stats.stragglers.append(cid)
+
     def _merge_and_checkpoint(self, state: dict, cid: int, counts, regs,
                               stats: ChunkStats,
                               faults: Optional[FaultInjector]) -> None:
+        fresh = cid not in state["chunks_done"]
         self.evaluator.merge_chunk(state, cid, counts, regs)
+        if fresh and self.on_chunk is not None:
+            self.on_chunk(cid, counts, regs)
         merges = len(state["chunks_done"])
         if (self._mgr is not None and self.checkpoint_every
                 and merges % self.checkpoint_every == 0):
@@ -302,7 +348,7 @@ class ChunkScheduler:
             t0 = time.perf_counter()
             counts, regs = self._attempt(
                 lambda: ev.eval_chunk(chunk), cid, stats, faults)
-            stats.chunk_eval_seconds.append(time.perf_counter() - t0)
+            self._note_eval_time(cid, time.perf_counter() - t0, stats)
             self._merge_and_checkpoint(state, cid, counts, regs, stats,
                                        faults)
         return n_triples
@@ -403,7 +449,7 @@ class ChunkScheduler:
             counts, regs = self._attempt(
                 lambda: ev.materialize_chunk(ev.dispatch_chunk(arr)),
                 cid, stats, faults, budget=self.max_attempts - used)
-        stats.chunk_eval_seconds.append(time.perf_counter() - t0)
+        self._note_eval_time(cid, time.perf_counter() - t0, stats)
         self._merge_and_checkpoint(state, cid, counts, regs, stats, faults)
 
 

@@ -5,15 +5,111 @@ A thin shell over the ``repro.qa`` pipeline:
   PYTHONPATH=src python -m repro.launch.assess --nt data.nt --base http://ex/
   PYTHONPATH=src python -m repro.launch.assess --synthetic 1000000 \\
       --chunks 32 --checkpoint-dir ckpt/ --backend pallas
+
+Incremental assessment + monitoring (``repro.store``):
+
+  # first run scans everything and freezes per-segment state
+  python -m repro.launch.assess --nt data.nt --store qstore/
+  # subsequent runs rescan only changed segments
+  python -m repro.launch.assess --nt data.nt --store qstore/
+  # live monitoring: re-assess whenever the file changes, append each
+  # snapshot to qstore/history.jsonl and print per-metric deltas
+  python -m repro.launch.assess --nt data.nt --store qstore/ --watch
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 
-def main():
+def _print_result(res, t_ingest, t_eval, dqv=False, out=None, err=None):
+    from repro.core import report
+
+    out = out if out is not None else sys.stdout
+    err = err if err is not None else sys.stderr
+    if res.exec_stats is not None:
+        s = res.exec_stats
+        evals = s.chunk_eval_seconds
+        line = (f"# chunks={s.chunks_total} attempts={s.attempts} "
+                f"resumed_from={s.resumed_from} mode={s.mode} "
+                f"passes/chunk={s.passes_per_chunk} "
+                f"host-blocked {sum(evals):.2f}s of "
+                f"{s.wall_seconds:.2f}s wall")
+        if s.bytes_total:
+            line += (f"\n# segments: {s.segments_reused} reused, "
+                     f"{s.segments_rescanned} rescanned | bytes rescanned "
+                     f"{s.bytes_rescanned:,}/{s.bytes_total:,} "
+                     f"({s.bytes_rescanned / max(s.bytes_total, 1):.1%})")
+        if s.stragglers:
+            line += f"\n# stragglers: {s.stragglers}"
+        print(line, file=err)
+    print(f"# {res.n_triples:,} triples | prep {t_ingest:.2f}s | "
+          f"eval {t_eval:.2f}s | {res.passes} pass(es)", file=err)
+    if dqv:
+        print(report.to_json(res), file=out)
+    else:
+        for k, v in sorted(res.values.items()):
+            print(f"{k:10s} {v:.6f}", file=out)
+
+
+def watch(pipe, path: str, *, interval: float = 2.0,
+          max_assessments: int | None = None, dqv: bool = False,
+          out=sys.stderr) -> int:
+    """Monitor ``path``: re-assess on every (mtime, size) change.
+
+    Each assessment goes through the pipeline's incremental store (so only
+    changed segments are rescanned and a snapshot lands in the store's
+    ``history.jsonl``) and prints per-metric deltas against the previous
+    run.  Returns the number of assessments performed;
+    ``max_assessments`` bounds the loop (None = run until interrupted).
+    """
+    last_sig = None
+    prev_values = None
+    runs = 0
+    while max_assessments is None or runs < max_assessments:
+        try:
+            sig = (os.path.getmtime(path), os.path.getsize(path))
+        except OSError:
+            time.sleep(interval)
+            continue
+        if sig == last_sig:
+            time.sleep(interval)
+            continue
+        last_sig = sig
+        t0 = time.time()
+        try:
+            res = pipe.run(path)
+        except OSError:
+            # the file vanished between the poll and the read (writer
+            # doing delete-then-recreate) — retry on the next poll
+            last_sig = None
+            time.sleep(interval)
+            continue
+        t_eval = time.time() - t0
+        print(f"== change detected ({time.strftime('%H:%M:%S')}) ==",
+              file=out)
+        # honor a captured stream fully: results only go to the process
+        # stdout when monitoring the default stderr console
+        _print_result(res, 0.0, t_eval, dqv=dqv,
+                      out=sys.stdout if out is sys.stderr else out, err=out)
+        if prev_values is not None:
+            deltas = {k: res.values[k] - prev_values[k]
+                      for k in res.values if k in prev_values
+                      and res.values[k] != prev_values[k]}
+            if deltas:
+                moved = " ".join(f"{k}{d:+.6f}" for k, d in
+                                 sorted(deltas.items()))
+                print(f"# deltas: {moved}", file=out)
+            else:
+                print("# deltas: none", file=out)
+        prev_values = dict(res.values)
+        runs += 1
+    return runs
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--nt", help="N-Triples file to assess")
     ap.add_argument("--base", action="append", default=[],
@@ -39,11 +135,25 @@ def main():
                          "transfer of the next chunk overlap device "
                          "compute (1 = double buffering)")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="incremental assessment against the persistent "
+                         "segment store at DIR: unchanged segments are "
+                         "served from frozen state, results stay "
+                         "bit-identical to a cold run, and every run "
+                         "appends a snapshot to DIR/history.jsonl")
+    ap.add_argument("--segment-bytes", type=int, default=0,
+                    help="target segment size for --store (0 = default)")
+    ap.add_argument("--watch", action="store_true",
+                    help="with --nt and --store: poll the file and "
+                         "re-assess on change (dataset monitoring)")
+    ap.add_argument("--watch-interval", type=float, default=2.0,
+                    metavar="SECONDS", help="poll interval for --watch")
+    ap.add_argument("--watch-max", type=int, default=None, metavar="N",
+                    help="stop --watch after N assessments (testing/CI)")
     ap.add_argument("--dqv", action="store_true", help="emit DQV JSON-LD")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     from repro import qa
-    from repro.core import report
     from repro.rdf import synth_encoded
 
     pipe = qa.pipeline().metrics(args.metrics).backend(args.backend)
@@ -56,14 +166,39 @@ def main():
                              checkpoint_dir=args.checkpoint_dir)
     if args.prefetch:
         pipe = pipe.pipelined(args.prefetch)
+    if args.store:
+        pipe = pipe.incremental(args.store,
+                                segment_bytes=args.segment_bytes)
     if args.base:
         pipe = pipe.base(*args.base)
+
+    if args.store and args.synthetic:
+        ap.error("--store diffs raw dataset bytes; use --nt, "
+                 "not --synthetic")
+    if args.store and (args.chunks or args.stream or args.checkpoint_dir):
+        ap.error("--store supersedes --chunks/--stream/--checkpoint-dir: "
+                 "segmentation replaces chunking, and the store itself is "
+                 "the persistence (frozen states double as in-run crash "
+                 "recovery)")
+    if args.watch:
+        if not (args.nt and args.store):
+            ap.error("--watch needs --nt and --store")
+        print(f"# {pipe.describe()}", file=sys.stderr)
+        print(f"# watching {args.nt} every {args.watch_interval}s "
+              f"(history: {os.path.join(args.store, 'history.jsonl')})",
+              file=sys.stderr)
+        try:
+            watch(pipe, args.nt, interval=args.watch_interval,
+                  max_assessments=args.watch_max, dqv=args.dqv)
+        except KeyboardInterrupt:
+            print("# watch stopped", file=sys.stderr)
+        return
 
     t0 = time.time()
     if args.synthetic:
         source = synth_encoded(args.synthetic, seed=0)
     elif args.nt:
-        source = pipe.ingest(args.nt)  # parse+encode timed as ingest
+        source = args.nt if args.store else pipe.ingest(args.nt)
     else:
         ap.error("need --nt or --synthetic")
     t_ingest = time.time() - t0
@@ -72,22 +207,7 @@ def main():
     t0 = time.time()
     res = pipe.run(source)
     t_eval = time.time() - t0
-
-    if res.exec_stats is not None:
-        s = res.exec_stats
-        evals = s.chunk_eval_seconds
-        print(f"# chunks={s.chunks_total} attempts={s.attempts} "
-              f"resumed_from={s.resumed_from} mode={s.mode} "
-              f"passes/chunk={s.passes_per_chunk} "
-              f"host-blocked {sum(evals):.2f}s of {s.wall_seconds:.2f}s wall",
-              file=sys.stderr)
-    print(f"# {res.n_triples:,} triples | prep {t_ingest:.2f}s | "
-          f"eval {t_eval:.2f}s | {res.passes} pass(es)", file=sys.stderr)
-    if args.dqv:
-        print(report.to_json(res))
-    else:
-        for k, v in sorted(res.values.items()):
-            print(f"{k:10s} {v:.6f}")
+    _print_result(res, t_ingest, t_eval, dqv=args.dqv)
 
 
 if __name__ == "__main__":

@@ -55,6 +55,8 @@ class ExecutionConfig:
     hll_p: int = hll.DEFAULT_P
     stream_triples: int = 0            # >0: streaming ingest chunk size
     prefetch: int = 0                  # >0: async pipelined chunk executor
+    store_dir: Optional[str] = None    # segment store: incremental mode
+    segment_bytes: int = 0             # target segment size (0 = default)
 
     def __post_init__(self):
         # validate here so every construction path (fluent, qa.assess
@@ -70,6 +72,9 @@ class ExecutionConfig:
                 f"stream_triples must be >= 0, got {self.stream_triples}")
         if self.prefetch < 0:
             raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
+        if self.segment_bytes < 0:
+            raise ValueError(
+                f"segment_bytes must be >= 0, got {self.segment_bytes}")
 
 
 def _resolve_metrics(spec) -> tuple[str, ...]:
@@ -186,8 +191,24 @@ class Pipeline:
         restores the sequential executor."""
         return self._exec(prefetch=int(prefetch))
 
+    def incremental(self, store_dir: str, *,
+                    segment_bytes: int = 0) -> "Pipeline":
+        """Incremental assessment against the persistent segment store at
+        ``store_dir`` (``repro.store``): the dataset is split into
+        content-defined segments, unchanged segments are served from their
+        frozen partial states, and only new/changed segments are rescanned
+        (through the configured backend; ``.pipelined()`` applies).
+        Results are bit-identical — HLL registers included — to a cold
+        assessment of the same bytes, and every run appends a timestamped
+        snapshot to the store's quality history.  ``segment_bytes`` tunes
+        the target segment size (0 = ``repro.store.DEFAULT_TARGET_BYTES``).
+        """
+        return self._exec(store_dir=os.fspath(store_dir),
+                          segment_bytes=int(segment_bytes))
+
     def single_shot(self) -> "Pipeline":
-        return self._exec(chunks=0, checkpoint_dir=None, stream_triples=0)
+        return self._exec(chunks=0, checkpoint_dir=None, stream_triples=0,
+                          store_dir=None)
 
     def interpret(self, flag: bool) -> "Pipeline":
         return self._exec(interpret=flag)
@@ -212,6 +233,8 @@ class Pipeline:
     def run(self, dataset: Dataset) -> AssessmentResult:
         """Ingest ``dataset`` and execute; chunked/streaming runs attach a
         ``dist.ChunkStats`` on ``result.exec_stats``."""
+        if self.exec.store_dir:
+            return self._run_incremental(dataset)
         data = self.ingest(dataset)
         if isinstance(data, TripleTensor) and not self.exec.chunks:
             return run_single_shot(self.evaluator(), data)
@@ -227,6 +250,52 @@ class Pipeline:
                               checkpoint_dir=self.exec.checkpoint_dir,
                               checkpoint_every=self.exec.checkpoint_every,
                               prefetch=self.exec.prefetch)
+
+    # -- incremental (segment store) -------------------------------------------
+    def _segments(self, dataset: Dataset):
+        """Ordered raw byte segments of ``dataset`` for the incremental
+        planner: paths/text are CDC-segmented (``repro.store.segmenter``);
+        an iterable of N-Triples text/bytes chunks is an *explicit*
+        segmentation — each line-aligned chunk is one segment."""
+        from .. import store as seg_store
+        tb = self.exec.segment_bytes or seg_store.DEFAULT_TARGET_BYTES
+        if isinstance(dataset, TripleTensor):
+            raise TypeError(
+                "incremental assessment diffs raw bytes against the "
+                "segment store; pass an N-Triples path, text, or an "
+                "iterable of text chunks, not an encoded TripleTensor")
+        if self._is_path(dataset):
+            def from_file():
+                with open(os.fspath(dataset), "rb") as f:
+                    yield from seg_store.iter_segments(f, tb)
+            return from_file()
+        if isinstance(dataset, (str, bytes)):
+            if isinstance(dataset, str):
+                if not self._looks_like_ntriples(dataset):
+                    raise FileNotFoundError(
+                        f"no such N-Triples file: {dataset!r}")
+                dataset = dataset.encode("utf-8")
+            return seg_store.iter_segments_bytes(dataset, tb)
+        if hasattr(dataset, "__iter__"):
+            def from_chunks():
+                for item in dataset:
+                    if isinstance(item, str):
+                        item = item.encode("utf-8")
+                    if not isinstance(item, bytes):
+                        raise TypeError(
+                            "incremental chunk streams must yield "
+                            "N-Triples text/bytes, got "
+                            f"{type(item).__name__}")
+                    yield item
+            return from_chunks()
+        raise TypeError(
+            f"cannot ingest {type(dataset).__name__} as a dataset")
+
+    def _run_incremental(self, dataset: Dataset) -> AssessmentResult:
+        from ..store import assess_incremental
+        return assess_incremental(
+            self.evaluator(), self._segments(dataset), self.exec.store_dir,
+            base_namespaces=self.base_ns, prefetch=self.exec.prefetch)
 
     # -- ingest ----------------------------------------------------------------
     def _encode(self, text: str) -> TripleTensor:
@@ -291,18 +360,23 @@ class Pipeline:
     # -- introspection ---------------------------------------------------------
     def describe(self) -> str:
         e = self.exec
-        mode = (f"chunked×{e.chunks}" if e.chunks else "single-shot")
-        if e.stream_triples:
-            mode += f" streamed@{e.stream_triples}"
+        if e.store_dir:
+            mode = f"incremental@{e.store_dir}"
+            if e.segment_bytes:
+                mode += f" seg={e.segment_bytes}B"
+        else:
+            mode = (f"chunked×{e.chunks}" if e.chunks else "single-shot")
+            if e.stream_triples:
+                mode += f" streamed@{e.stream_triples}"
         if e.prefetch:
             mode += f" async×{e.prefetch}"
-        if e.checkpoint_dir:
+        if e.checkpoint_dir and not e.store_dir:
             mode += f" ckpt={e.checkpoint_dir}"
         mesh = (f" mesh={tuple(e.mesh.axis_names)}" if e.mesh is not None
                 else "")
         return (f"qa.Pipeline[{len(self.metric_names)} metrics | "
                 f"{'fused' if e.fused else 'per-metric'} | {e.backend} | "
-                f"{mode}{mesh}]")
+                f"hll_p={e.hll_p} | {mode}{mesh}]")
 
     __repr__ = describe
 
@@ -315,10 +389,15 @@ def pipeline() -> Pipeline:
 
 def assess(dataset: Dataset, *, metrics="all",
            exec: Optional[ExecutionConfig] = None,
-           base: Sequence[str] = (), **exec_overrides) -> AssessmentResult:
+           base: Sequence[str] = (), store: Optional[str] = None,
+           **exec_overrides) -> AssessmentResult:
     """One-call assessment: ``qa.assess(ds, metrics="paper",
-    backend="pallas", chunks=8)``. Keyword overrides patch ``exec``."""
+    backend="pallas", chunks=8)``. Keyword overrides patch ``exec``;
+    ``store=`` is shorthand for ``store_dir=`` (incremental mode against a
+    ``repro.store`` segment store)."""
     cfg = exec if exec is not None else ExecutionConfig()
+    if store is not None:
+        exec_overrides.setdefault("store_dir", os.fspath(store))
     if exec_overrides:
         cfg = dataclasses.replace(cfg, **exec_overrides)
     p = pipeline().metrics(metrics).with_exec(cfg)

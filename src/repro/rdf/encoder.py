@@ -182,6 +182,12 @@ class TermDictionary:
             self._dts.extend(datatypes[new_rows])
         return ids
 
+    def keys_for(self, ids) -> list[bytes]:
+        """Term key bytes for an id sequence (e.g. a segment's dictionary
+        footprint, persisted by ``repro.store``)."""
+        kb = self._kb
+        return [kb[int(i)] for i in ids]
+
     def plane_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Per-id (flags, lengths, datatypes) int32 views for gathers."""
         return self._flags.view(), self._lengths.view(), self._dts.view()

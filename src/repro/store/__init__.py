@@ -1,0 +1,33 @@
+"""repro.store — persistent mergeable segment store + incremental planner.
+
+The paper's core trick — quality metrics as distributed merges of partial
+aggregates (§3, Algorithm 1) — makes those partials durable assets: the
+counter vectors and HLL register banks are commutative monoid elements, so
+a changed dataset only needs its *changed* segments rescanned.  This
+package persists per-segment partial states content-addressed by segment
+fingerprint and diffs a dataset's segments against the store:
+
+* ``segmenter`` — content-defined, line-aligned segmentation (edit
+  locality: a local edit invalidates O(1) segments);
+* ``store`` — on-disk format: manifest + ``segments/<fp>.seg`` states,
+  digests at every boundary, atomic writes, corrupt/torn files degrade to
+  a rescan of the affected segments only (an uncommitted but
+  self-verifying state left by a crashed run is adopted, so interrupted
+  scans resume from what they already froze);
+* ``runner`` — the incremental planner/executor; results are bit-identical
+  (registers included) to a cold assessment of the same bytes.
+
+Entry points: ``qa.pipeline().incremental(store_dir)`` /
+``qa.assess(..., store=...)`` / ``python -m repro.launch.assess --store``.
+"""
+from .segmenter import (DEFAULT_TARGET_BYTES, fingerprint, iter_segments,
+                        iter_segments_bytes, split_segments)
+from .store import FORMAT_VERSION, SegmentState, SegmentStore
+from .runner import assess_incremental, engine_signature
+
+__all__ = [
+    "DEFAULT_TARGET_BYTES", "fingerprint", "iter_segments",
+    "iter_segments_bytes", "split_segments",
+    "FORMAT_VERSION", "SegmentState", "SegmentStore",
+    "assess_incremental", "engine_signature",
+]

@@ -1,0 +1,205 @@
+"""The incremental planner: diff segments against the store, rescan only
+what changed, merge frozen partial states for the rest.
+
+Why results are *bit-identical* to a cold run (registers included)
+------------------------------------------------------------------
+Counter vectors are content-determined: every predicate reads flag /
+length / datatype planes or compares term ids for equality, all invariant
+to id *numbering*.  HLL register banks are not — they hash the term-id
+planes — so a frozen bank is only valid if its rows' ids match what a
+cold run over the *current* bytes would assign.  The runner therefore
+rebuilds the canonical ("cold") dictionary on every run, without
+re-reading unchanged bytes, by replaying each segment's persisted
+**dictionary footprint** (its distinct term keys in first-appearance
+order) through ``TermDictionary.intern_keys_batch`` in segment order.
+Replaying a footprint interns exactly the terms an actual encode of those
+bytes would intern, in the same order — so by induction the dictionary
+after segment *i* equals the cold dictionary after segment *i*.  A stored
+state is reused only when the replayed ids equal the ids recorded when
+its registers were computed; otherwise the segment is rescanned against
+the (already correctly positioned) dictionary.  Consequences:
+
+* **appends** never renumber existing terms (ids are append-only), so
+  every old segment is reused — the efficiency case the store exists for;
+* **deletes / mutations** renumber at most the terms first seen at or
+  after the edit; segments whose footprints replay to unchanged ids are
+  still reused, the rest are rescanned — correctness never depends on the
+  planner guessing edit semantics;
+* a **duplicate segment** (same bytes appearing twice) replays to the
+  same ids both times and is reused from one state file — counts merge
+  additively per occurrence, registers idempotently.
+
+Rescans run through the ordinary ``dist.ChunkScheduler`` (any backend,
+retries, optional ``prefetch`` pipelining); its ``on_chunk`` hook freezes
+each newly evaluated segment's state into the store as it merges.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from ..core.evaluator import AssessmentResult, QualityEvaluator
+from ..dist import ChunkScheduler
+from ..rdf import TermDictionary
+from ..rdf import ingest as rdf_ingest
+from .segmenter import fingerprint
+from .store import FORMAT_VERSION, SegmentState, SegmentStore
+
+
+def engine_signature(evaluator: QualityEvaluator,
+                     base_namespaces: Sequence[str] = ()) -> dict:
+    """What a frozen segment state depends on.  The backend is deliberately
+    absent: all backends are bit-identical (tests/test_qa.py), so a store
+    written under ``jnp`` is reusable under ``fused_scan`` and vice versa.
+    """
+    plans = [(tuple(m.name for m in p.metrics), p.n_counters, p.program,
+              p.sketch_specs) for p in evaluator.plans]
+    return {
+        "format": FORMAT_VERSION,
+        "metrics": [m.name for m in evaluator.metrics],
+        "fused": bool(evaluator.fused),
+        "hll_p": int(evaluator.hll_p),
+        "base_namespaces": list(base_namespaces),
+        "plans": hashlib.blake2b(repr(plans).encode(),
+                                 digest_size=8).hexdigest(),
+    }
+
+
+def _bucket_rows(n: int) -> int:
+    """Pad row counts to power-of-two buckets (min 1024) so the jitted
+    pass functions see O(log n) distinct shapes instead of one shape per
+    segment — content-defined segments all differ in length, and an XLA
+    recompile per segment would dwarf the scan itself.  Padding rows have
+    zero flag planes, so they are invisible to every counter and sketch.
+    """
+    b = 1024
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _footprint_ids(planes: np.ndarray) -> np.ndarray:
+    """Distinct term ids of a segment in first-appearance order over the
+    flattened (s0, p0, o0, s1, ...) sequence — the exact order a fresh
+    per-term intern loop would meet them."""
+    if planes.shape[0] == 0:
+        return np.zeros(0, np.int64)
+    flat = planes[:, :3].reshape(-1)
+    present, first = np.unique(flat, return_index=True)
+    order = np.argsort(first, kind="stable")
+    return present[order].astype(np.int64)
+
+
+def assess_incremental(evaluator: QualityEvaluator,
+                       segments: Iterable[bytes], store_dir: str, *,
+                       base_namespaces: Sequence[str] = (),
+                       prefetch: int = 0,
+                       straggler_factor: float = 4.0,
+                       history: bool = True,
+                       dataset_uri: str = "urn:repro:dataset",
+                       ) -> AssessmentResult:
+    """Assess ``segments`` (ordered raw byte segments of one dataset)
+    against the segment store at ``store_dir``.
+
+    Returns an ``AssessmentResult`` bit-identical to a cold assessment of
+    the concatenated bytes; ``result.exec_stats`` carries
+    ``segments_reused`` / ``segments_rescanned`` / ``bytes_rescanned``.
+    On success the store's manifest is committed for the new dataset
+    version and a quality snapshot is appended to ``history.jsonl``.
+    """
+    t0 = time.perf_counter()
+    ev = evaluator
+    store = SegmentStore(store_dir,
+                         engine_signature(ev, base_namespaces))
+    d = TermDictionary(base_namespaces)
+
+    order: list[dict] = []        # segment descriptors, dataset order
+    reused: list[SegmentState] = []
+    rescan_meta: dict[int, dict] = {}   # cid -> frozen-state ingredients
+    nbytes = {"total": 0, "rescanned": 0}
+
+    def produce():
+        """Sequential segment walk: replay-or-rescan.  Runs on the
+        scheduler's producer thread when pipelined; all side effects are
+        read only after the scheduler joins it."""
+        cid = 0
+        for seg in segments:
+            fp = fingerprint(seg)
+            nbytes["total"] += len(seg)
+            st = store.load_state(fp)
+            if st is not None:
+                ids = d.intern_keys_batch(st.keys, st.flags, st.lengths,
+                                          st.datatypes)
+                if np.array_equal(ids, st.ids):
+                    reused.append(st)
+                    order.append({"fp": fp, "n_bytes": len(seg),
+                                  "n_triples": st.n_triples})
+                    continue
+                # bytes unchanged but the id environment shifted (an
+                # earlier edit renumbered terms): registers are stale,
+                # rescan below — the replay above already interned this
+                # segment's terms at their correct cold positions, so
+                # re-encoding is id-stable
+            nbytes["rescanned"] += len(seg)
+            tt = rdf_ingest.parse_encode(seg, dictionary=d)
+            ids = _footprint_ids(tt.planes)
+            flags, lengths, dts = d.plane_arrays()
+            order.append({"fp": fp, "n_bytes": len(seg),
+                          "n_triples": len(tt)})
+            rescan_meta[cid] = {
+                "fp": fp, "n_bytes": len(seg), "n_triples": len(tt),
+                "keys": d.keys_for(ids), "flags": flags[ids],
+                "lengths": lengths[ids].astype(np.int64),
+                "datatypes": dts[ids], "ids": ids,
+            }
+            cid += 1
+            yield tt.padded_to(_bucket_rows(len(tt)))
+
+    # one merged state over ALL segments — the same commutative monoid the
+    # chunk executor uses.  Rescanned chunks merge in as they land
+    # (on_chunk), so no per-segment result is held beyond its freeze.
+    state = ev.chunk_state_init()
+    rescanned = [0]
+
+    def on_chunk(cid: int, counts, regs) -> None:
+        m = rescan_meta.pop(cid)
+        store.put_state(SegmentState(
+            fingerprint=m["fp"], n_bytes=m["n_bytes"],
+            n_triples=m["n_triples"],
+            counts=[np.asarray(c, np.int64) for c in counts],
+            regs={k: np.asarray(v, np.int32) for k, v in regs.items()},
+            keys=m["keys"], flags=m["flags"], lengths=m["lengths"],
+            datatypes=m["datatypes"], ids=m["ids"]))
+        ev.merge_chunk(state, ("rescanned", cid), counts, regs)
+        rescanned[0] += 1
+
+    sched = ChunkScheduler(ev, prefetch=prefetch,
+                           straggler_factor=straggler_factor,
+                           on_chunk=on_chunk)
+    _, stats = sched.run(produce())
+
+    for i, st in enumerate(reused):
+        ev.merge_chunk(state, ("reused", i), st.counts, st.regs)
+    n_total = sum(s["n_triples"] for s in order)
+    result = ev.finalize_state(state, n_total)
+    # only rescanned segments actually streamed bytes through the kernels
+    result.passes = rescanned[0] * ev.passes_per_chunk
+
+    stats.chunks_total = len(order)
+    stats.segments_reused = len(reused)
+    stats.segments_rescanned = rescanned[0]
+    stats.bytes_total = nbytes["total"]
+    stats.bytes_rescanned = nbytes["rescanned"]
+    stats.mode = "incremental" + ("+pipelined" if prefetch else "")
+    stats.wall_seconds = time.perf_counter() - t0
+    result.exec_stats = stats
+
+    store.commit(order)
+    if history:
+        from ..core import report
+        store.append_history(report.history_entry(
+            result, dataset_uri=dataset_uri))
+    return result

@@ -1,0 +1,287 @@
+"""Persistent, content-addressed segment store for assessment state.
+
+On-disk layout (all writes atomic: temp file + ``os.replace``)::
+
+    <dir>/
+      manifest.json        # {"format", "payload": {...}, "digest"}
+      history.jsonl        # appended quality snapshots (one JSON per line)
+      segments/
+        <fingerprint>.seg  # frozen partial state of one segment
+                           # (self-verifying header + npz payload)
+
+A segment's frozen state is the paper's partial aggregate made durable:
+the per-plan counter vectors, every HLL sketch's register bank, the triple
+count — plus the segment's **dictionary footprint**: its distinct term
+keys (with flag/length/datatype metadata) in first-appearance order and
+the global term ids they were assigned.  Term ids are append-only within a
+run, and every run re-derives the canonical (cold) id assignment by
+replaying footprints in segment order, so a stored register bank is valid
+exactly when its recorded ids match the replayed ones — the check the
+incremental planner performs before reuse.
+
+Integrity is checked at every boundary, each with a *local* fallback:
+
+* the manifest embeds a digest of its payload — corruption or a torn
+  write degrades to an empty manifest (full rescan, store rebuilt);
+* the manifest records each state file's content digest — a corrupt,
+  truncated, or missing ``<fp>.seg`` fails verification and only that
+  segment is rescanned;
+* states carry the engine signature implicitly: a manifest whose
+  ``signature`` does not match the current evaluator (metrics, fusion,
+  ``hll_p``, base namespaces, plan bytecode) is discarded wholesale —
+  counter layouts would not line up.
+
+This is persistence *across* runs, distinct from ``repro.checkpoint``'s
+in-run resume: checkpoints snapshot a half-merged scan so a crashed
+coordinator can continue; the segment store freezes per-segment monoid
+elements so the *next* assessment can skip unchanged data entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import zipfile
+from typing import Optional, Sequence
+
+import numpy as np
+
+FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass
+class SegmentState:
+    """Frozen partial assessment state of one segment."""
+    fingerprint: str
+    n_bytes: int
+    n_triples: int
+    counts: list                 # per-plan int64 counter vectors
+    regs: dict                   # sketch name -> int32 register bank
+    keys: list                   # footprint: term keys (bytes), first-seen order
+    flags: np.ndarray            # footprint metadata, aligned with keys
+    lengths: np.ndarray
+    datatypes: np.ndarray
+    ids: np.ndarray              # int64 global ids assigned at compute time
+
+
+def _digest(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+def _pack_keys(keys: Sequence[bytes]) -> tuple[np.ndarray, np.ndarray]:
+    blob = b"".join(keys)
+    offs = np.zeros(len(keys) + 1, np.int64)
+    np.cumsum([len(k) for k in keys], out=offs[1:])
+    return np.frombuffer(blob, np.uint8).copy(), offs
+
+
+def _unpack_keys(blob: np.ndarray, offs: np.ndarray) -> list[bytes]:
+    raw = blob.tobytes()
+    o = offs.tolist()
+    return [raw[o[i]:o[i + 1]] for i in range(len(o) - 1)]
+
+
+class SegmentStore:
+    """Content-addressed persistence for ``SegmentState``s + manifest.
+
+    ``signature`` is the engine signature dict (see
+    ``runner.engine_signature``); a stored manifest with a different
+    signature is ignored (its states describe different counter layouts or
+    sketch precisions), and the next ``commit`` replaces it.
+
+    Crash recovery: state files are frozen (``put_state``) as segments
+    merge, but the manifest is committed only at the end of a successful
+    run.  A crash in between leaves *orphan* state files — valid, but not
+    digest-listed in any manifest.  Each state file therefore embeds its
+    own content digest and the engine-signature digest, so ``load_state``
+    can safely adopt an orphan: torn writes fail to load, bit corruption
+    fails the self-digest, and a signature mismatch (different metrics /
+    ``hll_p``) is rejected before any array shapes can collide.  The id
+    replay check in the runner still gates reuse, so recovery never
+    weakens exactness — an interrupted cold scan resumes from the
+    segments it already froze.
+    """
+
+    def __init__(self, directory: str, signature: dict):
+        self.directory = directory
+        self.signature = signature
+        self._sig_digest = _digest(
+            json.dumps(signature, sort_keys=True).encode())
+        self._seg_dir = os.path.join(directory, "segments")
+        os.makedirs(self._seg_dir, exist_ok=True)
+        self._manifest = self._load_manifest()
+        # fingerprint -> state-file digest for the CURRENT manifest
+        self._digests: dict[str, str] = {
+            s["fp"]: s["digest"]
+            for s in self._manifest.get("segments", [])}
+        self._pending: dict[str, str] = {}   # fp -> digest, put this run
+
+    # -- manifest --------------------------------------------------------------
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.directory, "manifest.json")
+
+    @property
+    def history_path(self) -> str:
+        return os.path.join(self.directory, "history.jsonl")
+
+    def _load_manifest(self) -> dict:
+        try:
+            with open(self.manifest_path) as f:
+                doc = json.load(f)
+            payload = doc["payload"]
+            want = doc["digest"]
+        except (OSError, ValueError, KeyError):
+            return {}
+        got = _digest(json.dumps(payload, sort_keys=True).encode())
+        if got != want:
+            return {}            # torn/corrupt manifest -> cold start
+        if payload.get("format") != FORMAT_VERSION:
+            return {}
+        if payload.get("signature") != self.signature:
+            return {}            # different engine -> states unusable
+        return payload
+
+    @property
+    def known_segments(self) -> list[dict]:
+        """Segment descriptors of the last committed manifest, in order."""
+        return list(self._manifest.get("segments", []))
+
+    def _atomic_write(self, path: str, data: bytes) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+
+    def commit(self, segments: Sequence[dict]) -> None:
+        """Persist the manifest for the current dataset version.
+
+        ``segments``: ordered descriptors ``{"fp", "n_bytes", "n_triples"}``
+        — the state-file digests are filled in from this run's puts and the
+        previous manifest.  Unreferenced state files are garbage-collected
+        (content addressing means a fingerprint shared across versions is
+        naturally retained).
+        """
+        digests = {**self._digests, **self._pending}
+        seg_docs = []
+        for s in segments:
+            fp = s["fp"]
+            if fp not in digests:
+                raise KeyError(f"no state on disk for segment {fp}")
+            seg_docs.append({**s, "digest": digests[fp]})
+        payload = {
+            "format": FORMAT_VERSION,
+            "signature": self.signature,
+            "segments": seg_docs,
+            "n_segments": len(seg_docs),
+            "n_bytes": int(sum(s["n_bytes"] for s in seg_docs)),
+            "n_triples": int(sum(s["n_triples"] for s in seg_docs)),
+        }
+        doc = {"payload": payload,
+               "digest": _digest(json.dumps(payload, sort_keys=True).encode())}
+        self._atomic_write(self.manifest_path,
+                           json.dumps(doc, indent=2).encode())
+        self._manifest = payload
+        self._digests = {s["fp"]: s["digest"] for s in seg_docs}
+        self._pending = {}
+        self._gc(set(self._digests))
+
+    def _gc(self, live: set) -> None:
+        for name in os.listdir(self._seg_dir):
+            fp = name[:-4] if name.endswith(".seg") else None
+            if fp not in live:
+                try:
+                    os.remove(os.path.join(self._seg_dir, name))
+                except OSError:
+                    pass
+
+    # -- segment states --------------------------------------------------------
+    # state file = one header line ("reprostore1 <payload digest>
+    # <signature digest>\n") + the npz payload; the header makes the file
+    # self-verifying so orphans (frozen before a crash, never committed to
+    # a manifest) can be adopted safely
+    _HEADER_MAGIC = b"reprostore1"
+
+    def _state_path(self, fp: str) -> str:
+        return os.path.join(self._seg_dir, fp + ".seg")
+
+    def put_state(self, state: SegmentState) -> None:
+        """Serialize one segment's state; atomic, digest recorded for the
+        next ``commit``."""
+        blob, offs = _pack_keys(state.keys)
+        arrays = {
+            "meta": np.asarray([state.n_bytes, state.n_triples], np.int64),
+            "ids": np.asarray(state.ids, np.int64),
+            "flags": np.asarray(state.flags, np.int32),
+            "lengths": np.asarray(state.lengths, np.int64),
+            "datatypes": np.asarray(state.datatypes, np.int32),
+            "keys_blob": blob,
+            "key_offsets": offs,
+        }
+        for i, c in enumerate(state.counts):
+            arrays[f"counts_{i}"] = np.asarray(c, np.int64)
+        for name, regs in state.regs.items():
+            arrays[f"reg_{name}"] = np.asarray(regs, np.int32)
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        payload = buf.getvalue()
+        header = b"%s %s %s\n" % (self._HEADER_MAGIC,
+                                  _digest(payload).encode(),
+                                  self._sig_digest.encode())
+        data = header + payload
+        self._atomic_write(self._state_path(state.fingerprint), data)
+        self._pending[state.fingerprint] = _digest(data)
+
+    def load_state(self, fp: str) -> Optional[SegmentState]:
+        """Load + verify one segment's state; ``None`` on any failure
+        (missing file, digest mismatch, wrong engine signature, malformed
+        arrays) — the caller falls back to rescanning that segment.
+
+        Verification is two-layer: the manifest's file digest when the
+        fingerprint is committed, else the file's own header (orphan
+        adoption after a crash between ``put_state`` and ``commit``)."""
+        want = self._pending.get(fp) or self._digests.get(fp)
+        try:
+            with open(self._state_path(fp), "rb") as f:
+                data = f.read()
+            if want is not None:
+                if _digest(data) != want:
+                    return None
+            nl = data.find(b"\n")
+            if nl < 0:
+                return None
+            parts = data[:nl].split(b" ")
+            payload = data[nl + 1:]
+            if (len(parts) != 3 or parts[0] != self._HEADER_MAGIC
+                    or parts[1].decode() != _digest(payload)
+                    or parts[2].decode() != self._sig_digest):
+                return None
+            if want is None:
+                # verified orphan: make it committable this run
+                self._pending.setdefault(fp, _digest(data))
+            with np.load(io.BytesIO(payload)) as z:
+                meta = z["meta"]
+                counts = []
+                while f"counts_{len(counts)}" in z:
+                    counts.append(z[f"counts_{len(counts)}"])
+                regs = {k[4:]: z[k] for k in z.files if k.startswith("reg_")}
+                return SegmentState(
+                    fingerprint=fp,
+                    n_bytes=int(meta[0]), n_triples=int(meta[1]),
+                    counts=counts, regs=regs,
+                    keys=_unpack_keys(z["keys_blob"], z["key_offsets"]),
+                    flags=z["flags"], lengths=z["lengths"],
+                    datatypes=z["datatypes"], ids=z["ids"])
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+            return None
+
+    # -- history ---------------------------------------------------------------
+    def append_history(self, entry: dict) -> None:
+        with open(self.history_path, "a") as f:
+            f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+    def history(self) -> list[dict]:
+        from ..core import report
+        return report.load_history(self.history_path)

@@ -185,6 +185,29 @@ def test_pipelined_retries_materialize_failures(tensor):
         assert res.values[k] == pytest.approx(v, abs=1e-9), k
 
 
+def test_straggler_detection_flags_slow_chunks(tensor):
+    """The scheduler consumes its own chunk_eval_seconds: a chunk slower
+    than straggler_factor × the running median is flagged on
+    ChunkStats.stragglers and reported in one warning line."""
+    from repro.core.evaluator import QualityEvaluator
+    from repro.dist import ChunkScheduler, FaultInjector
+    ev = QualityEvaluator(PAPER_METRICS, fused=True, backend="jnp")
+    ref = ev.assess(tensor)
+    sched = ChunkScheduler(ev, n_chunks=8, straggler_factor=3.0)
+    faults = FaultInjector(slow_chunks={5: 0.6})
+    with pytest.warns(RuntimeWarning, match="straggler"):
+        res, stats = sched.run(tensor, faults=faults)
+    assert 5 in stats.stragglers
+    assert len(stats.chunk_eval_seconds) == 8
+    # detection never perturbs results
+    for k, v in ref.values.items():
+        assert res.values[k] == pytest.approx(v, abs=1e-9), k
+    # factor=0 disables detection
+    _, stats2 = ChunkScheduler(ev, n_chunks=8, straggler_factor=0).run(
+        tensor, faults=FaultInjector(slow_chunks={5: 0.3}))
+    assert stats2.stragglers == []
+
+
 def test_pipelined_ingest_error_propagates(tensor):
     def bad_stream():
         yield tensor.chunks(4)[0]
@@ -295,6 +318,23 @@ def test_describe_mentions_strategy():
     d2 = qa.pipeline().backend("fused_scan").chunked(4).pipelined(2) \
            .describe()
     assert "fused_scan" in d2 and "async×2" in d2
+
+
+def test_describe_fully_determines_execution():
+    """repr must surface hll_p and the incremental/store mode — two
+    configs that execute differently must describe differently."""
+    assert "hll_p=12" in qa.pipeline().describe()       # the default
+    assert "hll_p=9" in qa.pipeline().hll(9).describe()
+    d = qa.pipeline().incremental("/tmp/qstore", segment_bytes=4096) \
+          .pipelined().describe()
+    assert "incremental@/tmp/qstore" in d
+    assert "seg=4096B" in d and "async×1" in d
+    # incremental replaces the chunked/streamed mode in the description
+    d2 = qa.pipeline().chunked(8).incremental("/tmp/qstore").describe()
+    assert "chunked" not in d2
+    # ... and single_shot() clears the store
+    assert "incremental" not in (qa.pipeline().incremental("/tmp/qstore")
+                                 .single_shot().describe())
 
 
 # --- polymorphic ingest ------------------------------------------------------

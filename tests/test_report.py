@@ -1,10 +1,12 @@
-"""DQV report emission: one measurement per metric, deterministic output,
-and N-Triples that re-parse through our own parser."""
+"""DQV report emission: one measurement per metric, properly namespaced
+keys, deterministic output, N-Triples that re-parse through our own parser
+(dimension + provenance triples included), and the quality history."""
 import json
 
 import pytest
 
 from repro.core import ALL_METRICS, PAPER_METRICS, QualityEvaluator, report
+from repro.core.metrics import REGISTRY
 from repro.rdf import synth_encoded
 from repro.rdf.parser import parse_ntriples
 
@@ -25,9 +27,27 @@ def test_dqv_one_measurement_per_metric(result):
     assert measured == {f"urn:repro:metric:{n}" for n in ALL_METRICS}
     for m in dqv["measurements"]:
         assert m[report.DQV + "computedOn"]["@id"] == "urn:test:ds"
-        assert m["generatedAtTime"] == TS
         assert isinstance(m[report.DQV + "value"], float)
-        assert m["inDimension"] and m["description"]
+
+
+def test_dqv_keys_are_namespaced(result):
+    """Every property key carries its vocabulary namespace — no bare
+    `inDimension`/`description`/`generatedAtTime` keys mixed in with
+    namespaced ones."""
+    dqv = report.to_dqv(result, computed_on=TS)
+    for m in dqv["measurements"]:
+        bare = [k for k in m if not k.startswith(("@", "http://"))]
+        assert bare == [], f"un-namespaced keys: {bare}"
+        assert m[report.DQV + "inDimension"]["@id"].startswith(
+            "urn:repro:dimension:")
+        assert m[report.DCT + "description"]
+        t = m[report.PROV + "generatedAtTime"]
+        assert t == {"@value": TS, "@type": report.XSD + "dateTime"}
+    # dimensions come from the registry taxonomy
+    dims = {m[report.DQV + "inDimension"]["@id"]
+            for m in dqv["measurements"]}
+    assert dims == {f"urn:repro:dimension:{REGISTRY[n].dimension}"
+                    for n in ALL_METRICS}
 
 
 def test_dqv_deterministic_under_fixed_timestamp(result):
@@ -41,7 +61,8 @@ def test_dqv_deterministic_under_fixed_timestamp(result):
 
 
 def test_ntriples_report_reparses(result):
-    nt = report.to_ntriples(result, dataset_uri="urn:test:ds")
+    nt = report.to_ntriples(result, dataset_uri="urn:test:ds",
+                            computed_on=TS)
     triples = parse_ntriples(nt)
     # no malformed lines (the parser flags them with a sentinel IRI)
     assert all(s.value != "urn:repro:parse-error" for s, _, _ in triples)
@@ -61,7 +82,102 @@ def test_ntriples_report_reparses(result):
     assert len(linked) == len(result.values)
 
 
+def test_ntriples_report_has_dimension_and_timestamp(result):
+    """The N-Triples serialization must describe the same graph as the
+    JSON-LD: dimension + provenance triples were previously omitted."""
+    nt = report.to_ntriples(result, computed_on=TS)
+    triples = parse_ntriples(nt)
+    dims = [(s, o) for s, p, o in triples
+            if p.value == report.DQV + "inDimension"]
+    assert len(dims) == len(result.values)
+    for _, o in dims:
+        assert o.kind == "iri" and o.value.startswith(
+            "urn:repro:dimension:")
+    times = [o for s, p, o in triples
+             if p.value == report.PROV + "generatedAtTime"]
+    assert len(times) == len(result.values)
+    for o in times:
+        assert o.kind == "literal"
+        assert o.datatype == report.XSD + "dateTime"
+        assert o.value == TS
+    # the NT graph also carries the metric descriptions the JSON-LD has
+    descs = {o.value for s, p, o in triples
+             if p.value == report.DCT + "description"}
+    assert descs == {REGISTRY[n].description for n in result.values}
+
+
 def test_ntriples_report_deterministic(result):
-    assert report.to_ntriples(result) == report.to_ntriples(result)
-    lines = report.to_ntriples(result).strip().splitlines()
-    assert len(lines) == 3 * len(result.values)
+    assert report.to_ntriples(result, computed_on=TS) == \
+        report.to_ntriples(result, computed_on=TS)
+    lines = report.to_ntriples(result, computed_on=TS).strip().splitlines()
+    assert len(lines) == 6 * len(result.values)
+
+
+# --- quality history ----------------------------------------------------------
+
+def test_history_append_load_roundtrip(result, tmp_path):
+    path = tmp_path / "history.jsonl"
+    e1 = report.append_history(path, result, computed_on=TS,
+                               dataset_uri="urn:test:ds")
+    e2 = report.append_history(path, result,
+                               computed_on="2020-01-02T00:00:00+00:00")
+    loaded = report.load_history(path)
+    assert loaded == [e1, e2]
+    assert loaded[0]["values"] == {k: float(v)
+                                   for k, v in result.values.items()}
+    assert loaded[0]["nTriples"] == result.n_triples
+
+
+def test_history_skips_torn_tail(result, tmp_path):
+    path = tmp_path / "history.jsonl"
+    report.append_history(path, result, computed_on=TS)
+    with open(path, "a") as f:
+        f.write('{"values": {"L1": 1.0}, "trunc')  # torn final append
+    loaded = report.load_history(path)
+    assert len(loaded) == 1
+    assert report.load_history(tmp_path / "missing.jsonl") == []
+
+
+def test_to_dqv_history_trend_report(result, tmp_path):
+    path = tmp_path / "history.jsonl"
+    report.append_history(path, result, computed_on=TS)
+    # second snapshot with one metric nudged
+    import dataclasses
+    nudged = dataclasses.replace(
+        result, values={**result.values,
+                        "L1": result.values["L1"] + 0.25})
+    report.append_history(path, nudged,
+                          computed_on="2020-01-02T00:00:00+00:00")
+    trend = report.to_dqv_history(path)
+    assert trend["snapshots"] == 2
+    m = trend["metrics"]["L1"]
+    assert m["values"] == [result.values["L1"], result.values["L1"] + 0.25]
+    assert m["delta"] == pytest.approx(0.25)
+    assert m["latest"] == pytest.approx(result.values["L1"] + 0.25)
+    for name, mm in trend["metrics"].items():
+        if name != "L1":
+            assert mm["delta"] == 0.0
+    # an entry list works the same as a path
+    assert report.to_dqv_history(report.load_history(path)) == trend
+
+
+def test_to_dqv_history_aligns_mixed_metric_sets():
+    """Snapshots may measure different metric sets (engine reconfigured
+    between runs): series stay aligned to the snapshot axis with None for
+    absent values, and delta only compares the last two ADJACENT
+    snapshots that both carry the metric."""
+    entries = [
+        {"generatedAtTime": "t0", "values": {"A": 1.0, "B": 5.0}},
+        {"generatedAtTime": "t1", "values": {"A": 2.0}},
+        {"generatedAtTime": "t2", "values": {"A": 4.0, "C": 9.0}},
+    ]
+    trend = report.to_dqv_history(entries)
+    assert trend["snapshots"] == 3
+    assert trend["metrics"]["A"]["values"] == [1.0, 2.0, 4.0]
+    assert trend["metrics"]["A"]["delta"] == 2.0
+    assert trend["metrics"]["B"]["values"] == [5.0, None, None]
+    assert trend["metrics"]["B"]["delta"] == 0.0    # absent from the tail
+    assert trend["metrics"]["B"]["latest"] == 5.0
+    assert trend["metrics"]["C"]["values"] == [None, None, 9.0]
+    assert trend["metrics"]["C"]["delta"] == 0.0    # no adjacent pair
+    assert trend["metrics"]["C"]["min"] == trend["metrics"]["C"]["max"] == 9.0

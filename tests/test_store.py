@@ -1,0 +1,424 @@
+"""repro.store — incremental assessment against the persistent segment
+store.
+
+The contract under test: for ANY edit sequence (append / delete /
+in-place mutation), an incremental ``run()`` against the store produces
+metric values AND HLL register banks bit-identical to a cold full
+assessment of the final bytes — across every backend — while unchanged
+segments are served from frozen state (no kernel passes).  Corrupt or
+truncated store files must degrade to a rescan of the affected segments
+only, never to a wrong answer.
+"""
+import io
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import qa
+from repro.core import ALL_METRICS
+from repro.rdf import bsbm_ntriples
+from repro.store import (SegmentStore, engine_signature, fingerprint,
+                         iter_segments, split_segments)
+
+BASE = ("http://bsbm.example.org/",)
+SEG = 16384         # small target → many segments on the test corpus
+
+
+def corpus(n_products=300, seed=11) -> bytes:
+    return bsbm_ntriples(n_products, seed=seed).encode()
+
+
+def pipe(backend="jnp", store=None):
+    p = qa.pipeline().metrics(ALL_METRICS).backend(backend).base(*BASE)
+    if store is not None:
+        p = p.incremental(store, segment_bytes=SEG)
+    return p
+
+
+def assert_bit_identical(inc, cold):
+    assert inc.values == cold.values
+    assert inc.n_triples == cold.n_triples
+    assert inc.sketch_estimates == cold.sketch_estimates
+    assert set(inc.registers) == set(cold.registers)
+    for k in cold.registers:
+        np.testing.assert_array_equal(inc.registers[k], cold.registers[k],
+                                      f"registers:{k}")
+
+
+# --- segmenter ----------------------------------------------------------------
+
+def test_segments_partition_input_and_align_to_lines():
+    data = corpus(300)
+    segs = split_segments(data, SEG)
+    assert b"".join(segs) == data
+    assert len(segs) > 4
+    assert all(s.endswith(b"\n") for s in segs[:-1])
+    # streaming over a file object decides identical boundaries
+    assert list(iter_segments(io.BytesIO(data), SEG)) == segs
+
+
+def test_segmentation_edit_locality():
+    data = corpus(300)
+    known = {fingerprint(s) for s in split_segments(data, SEG)}
+
+    appended = data + bsbm_ntriples(3, seed=99).encode()
+    changed = [s for s in split_segments(appended, SEG)
+               if fingerprint(s) not in known]
+    assert len(changed) <= 2  # the tail segment + possibly one new one
+
+    mid = data.find(b"\n", len(data) // 2) + 1
+    end = data.find(b"\n", mid) + 1
+    mutated = data[:mid] + b"<http://x/s> <http://x/p> <http://x/o> .\n" \
+        + data[end:]
+    changed = [s for s in split_segments(mutated, SEG)
+               if fingerprint(s) not in known]
+    assert len(changed) <= 2  # only the segment(s) framing the edit
+
+
+def test_tiny_segment_targets_keep_edit_locality():
+    """Small targets narrow the candidate mask below the magic value; the
+    masked comparison must still produce content-defined cuts (a never-
+    matching test would silently degrade to fixed-size splitting and void
+    the reuse contract)."""
+    data = corpus(300)
+    for target in (1024, 4096):
+        segs = split_segments(data, target)
+        assert b"".join(segs) == data
+        known = {fingerprint(s) for s in segs}
+        edited = b"<http://x/s> <http://x/p> <http://x/o> .\n" + data
+        changed = [s for s in split_segments(edited, target)
+                   if fingerprint(s) not in known]
+        assert len(changed) <= 2, f"target={target}: no edit locality"
+
+
+def test_newline_free_input_degrades_gracefully():
+    blob = b"x" * (1 << 20)
+    segs = split_segments(blob, 4096)
+    assert b"".join(segs) == blob  # cannot cut: one jumbo segment
+
+
+# --- exactness ----------------------------------------------------------------
+
+def test_cold_then_warm_is_bit_identical(tmp_path):
+    data = corpus()
+    cold = pipe().run(data.decode())
+    inc = pipe(store=tmp_path / "st").run(data.decode())
+    assert_bit_identical(inc, cold)
+    s = inc.exec_stats
+    assert s.segments_rescanned == s.chunks_total > 4
+    assert s.segments_reused == 0
+    # warm, unchanged: everything served from frozen state, zero passes
+    warm = pipe(store=tmp_path / "st").run(data.decode())
+    assert_bit_identical(warm, cold)
+    s = warm.exec_stats
+    assert s.segments_rescanned == 0
+    assert s.bytes_rescanned == 0
+    assert s.segments_reused == s.chunks_total
+    assert warm.passes == 0
+    assert s.mode == "incremental"
+
+
+def test_append_rescans_only_the_tail(tmp_path):
+    data = corpus()
+    store = tmp_path / "st"
+    pipe(store=store).run(data.decode())
+    appended = data + bsbm_ntriples(5, seed=77).encode()
+    inc = pipe(store=store).run(appended.decode())
+    cold = pipe().run(appended.decode())
+    assert_bit_identical(inc, cold)
+    s = inc.exec_stats
+    assert s.segments_rescanned <= 2
+    assert s.segments_reused >= s.chunks_total - 2
+    assert s.bytes_rescanned < 0.2 * s.bytes_total
+
+
+def _random_edit(rng, data: bytes) -> bytes:
+    lines = data.split(b"\n")
+    if lines and lines[-1] == b"":
+        lines.pop()
+    op = rng.integers(0, 3)
+    if op == 0 or len(lines) < 10:       # append a few fresh triples
+        extra = bsbm_ntriples(int(rng.integers(1, 6)),
+                              seed=int(rng.integers(1 << 30)))
+        return data + extra.encode()
+    if op == 1:                           # delete a random region
+        i = int(rng.integers(0, len(lines) - 5))
+        j = i + int(rng.integers(1, min(len(lines) - i, 200)))
+        del lines[i:j]
+    else:                                 # in-place mutation
+        i = int(rng.integers(0, len(lines)))
+        lines[i] = (b'<http://mut.example/s%d> <http://mut.example/p> '
+                    b'"%d" .' % (int(rng.integers(1000)),
+                                 int(rng.integers(1000))))
+    return b"\n".join(lines) + b"\n"
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "fused_scan"])
+def test_randomized_edit_sequence_bit_identical(tmp_path, backend):
+    """The acceptance criterion: incremental == cold (registers included)
+    after every step of a random append/delete/mutate sequence, for every
+    backend.  jnp gets a longer program; the interpret-mode kernel
+    backends get a shorter one to keep the suite fast — the store path is
+    backend-independent above the evaluator, so the cross-backend signal
+    is that frozen states and rescans merge identically everywhere."""
+    rng = np.random.default_rng(0xC0FFEE if backend == "jnp" else 7)
+    steps = 5 if backend == "jnp" else 2
+    data = corpus(220, seed=3)
+    store = tmp_path / "st"
+    p_inc, p_cold = pipe(backend, store=store), pipe(backend)
+    for step in range(steps):
+        inc = p_inc.run(data.decode())
+        cold = p_cold.run(data.decode())
+        assert_bit_identical(inc, cold)
+        data = _random_edit(rng, data)
+    # a reuse actually happened somewhere (the sequence isn't all-cold)
+    hist = SegmentStore(os.fspath(store), engine_signature(
+        p_inc.evaluator(), BASE)).history()
+    assert len(hist) == steps
+    assert any(h.get("segments_reused", 0) > 0 for h in hist[1:])
+
+
+def test_store_written_by_one_backend_reused_by_another(tmp_path):
+    """The engine signature excludes the backend: all backends are
+    bit-identical, so frozen states are interchangeable."""
+    data = corpus(250, seed=9)
+    store = tmp_path / "st"
+    pipe("jnp", store=store).run(data.decode())
+    inc = pipe("fused_scan", store=store).run(data.decode())
+    assert inc.exec_stats.segments_rescanned == 0
+    assert_bit_identical(inc, pipe("jnp").run(data.decode()))
+
+
+def test_duplicate_segments_merge_per_occurrence(tmp_path):
+    """The same bytes appearing twice is ONE state file but TWO merge
+    contributions: counts are additive per occurrence, registers
+    idempotent."""
+    block = corpus(120, seed=21)
+    assert len(split_segments(block, SEG)) >= 2
+    doubled = block + block
+    inc = pipe(store=tmp_path / "st").run(doubled.decode())
+    cold = pipe().run(doubled.decode())
+    assert_bit_identical(inc, cold)
+    warm = pipe(store=tmp_path / "st").run(doubled.decode())
+    assert warm.exec_stats.segments_rescanned == 0
+    assert_bit_identical(warm, cold)
+
+
+def test_explicit_chunk_stream_as_segments(tmp_path):
+    """An iterable of line-aligned text chunks is an explicit
+    segmentation: each chunk is one content-addressed segment."""
+    blocks = [bsbm_ntriples(60, seed=s) for s in (1, 2, 3)]
+    whole = "".join(blocks)
+    cold = pipe().run(whole)
+    inc = pipe(store=tmp_path / "st").run(iter(blocks))
+    assert_bit_identical(inc, cold)
+    assert inc.exec_stats.chunks_total == 3
+    # replacing one chunk rescans exactly that chunk
+    blocks2 = [blocks[0], bsbm_ntriples(60, seed=8), blocks[2]]
+    inc2 = pipe(store=tmp_path / "st").run(iter(blocks2))
+    cold2 = pipe().run("".join(blocks2))
+    assert_bit_identical(inc2, cold2)
+    assert inc2.exec_stats.segments_rescanned >= 1
+    assert inc2.exec_stats.segments_reused >= 1
+
+
+def test_pipelined_incremental(tmp_path):
+    data = corpus(250, seed=4)
+    store = tmp_path / "st"
+    p = pipe(store=store).pipelined(1)
+    inc = p.run(data.decode())
+    cold = pipe().run(data.decode())
+    assert_bit_identical(inc, cold)
+    assert inc.exec_stats.mode == "incremental+pipelined"
+    warm = p.run(data.decode())
+    assert warm.exec_stats.segments_rescanned == 0
+    assert_bit_identical(warm, cold)
+
+
+# --- robustness ---------------------------------------------------------------
+
+def _state_files(store_dir):
+    seg_dir = os.path.join(store_dir, "segments")
+    return sorted(os.path.join(seg_dir, n) for n in os.listdir(seg_dir))
+
+
+def test_truncated_state_file_rescans_that_segment_only(tmp_path):
+    data = corpus()
+    store = os.fspath(tmp_path / "st")
+    cold = pipe().run(data.decode())
+    pipe(store=store).run(data.decode())
+    victim = _state_files(store)[2]
+    with open(victim, "rb") as f:
+        blob = f.read()
+    with open(victim, "wb") as f:
+        f.write(blob[:len(blob) // 2])   # torn write
+    inc = pipe(store=store).run(data.decode())
+    assert_bit_identical(inc, cold)
+    s = inc.exec_stats
+    assert s.segments_rescanned == 1     # only the corrupt one
+    assert s.segments_reused == s.chunks_total - 1
+    # the rescan re-froze it: next run is fully warm again
+    warm = pipe(store=store).run(data.decode())
+    assert warm.exec_stats.segments_rescanned == 0
+
+
+def test_corrupted_state_bytes_detected_by_digest(tmp_path):
+    """Same-length bit corruption: only the content digest can catch it."""
+    data = corpus(200, seed=5)
+    store = os.fspath(tmp_path / "st")
+    cold = pipe().run(data.decode())
+    pipe(store=store).run(data.decode())
+    victim = _state_files(store)[0]
+    with open(victim, "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0xFF]))
+    inc = pipe(store=store).run(data.decode())
+    assert_bit_identical(inc, cold)
+    assert inc.exec_stats.segments_rescanned == 1
+
+
+def test_missing_state_file_rescans_that_segment_only(tmp_path):
+    data = corpus(200, seed=6)
+    store = os.fspath(tmp_path / "st")
+    cold = pipe().run(data.decode())
+    pipe(store=store).run(data.decode())
+    os.remove(_state_files(store)[1])
+    inc = pipe(store=store).run(data.decode())
+    assert_bit_identical(inc, cold)
+    assert inc.exec_stats.segments_rescanned == 1
+
+
+def test_corrupt_manifest_recovers_from_self_verifying_states(tmp_path):
+    """A corrupt manifest discards the committed descriptors, but state
+    files are self-verifying (embedded payload + signature digests), so
+    intact states are adopted as orphans instead of rescanned — and the
+    next commit rewrites a valid manifest."""
+    data = corpus(200, seed=7)
+    store = os.fspath(tmp_path / "st")
+    cold = pipe().run(data.decode())
+    pipe(store=store).run(data.decode())
+    manifest = os.path.join(store, "manifest.json")
+    with open(manifest) as f:
+        doc = json.load(f)
+    doc["payload"]["segments"][0]["n_triples"] += 1  # digest now wrong
+    with open(manifest, "w") as f:
+        json.dump(doc, f)
+    inc = pipe(store=store).run(data.decode())
+    assert_bit_identical(inc, cold)
+    assert inc.exec_stats.segments_rescanned == 0    # orphans adopted
+    warm = pipe(store=store).run(data.decode())
+    assert warm.exec_stats.segments_rescanned == 0
+    assert_bit_identical(warm, cold)
+
+
+def test_crash_between_freeze_and_commit_resumes(tmp_path):
+    """States freeze as segments merge but the manifest commits at the
+    end — the in-run crash-recovery story for incremental scans: a rerun
+    adopts every already-frozen segment instead of rescanning from zero
+    (`checkpoint/` in-run resume is not wired into incremental mode; this
+    is its equivalent)."""
+    data = corpus(200, seed=8)
+    store = os.fspath(tmp_path / "st")
+    cold = pipe().run(data.decode())
+    pipe(store=store).run(data.decode())
+    os.remove(os.path.join(store, "manifest.json"))  # crash before commit
+    inc = pipe(store=store).run(data.decode())
+    assert_bit_identical(inc, cold)
+    assert inc.exec_stats.segments_rescanned == 0
+    # truncated manifest (torn write) behaves the same
+    manifest = os.path.join(store, "manifest.json")
+    with open(manifest, "r+") as f:
+        f.truncate(os.path.getsize(manifest) // 2)
+    inc2 = pipe(store=store).run(data.decode())
+    assert_bit_identical(inc2, cold)
+    assert inc2.exec_stats.segments_rescanned == 0
+
+
+def test_orphan_with_wrong_signature_rejected(tmp_path):
+    """Orphan adoption must not outflank the engine-signature check: a
+    state frozen under a different hll_p has differently-shaped register
+    banks and must be rescanned, not merged."""
+    data = corpus(150, seed=19)
+    store = os.fspath(tmp_path / "st")
+    pipe(store=store).run(data.decode())
+    os.remove(os.path.join(store, "manifest.json"))  # all states orphaned
+    other = qa.pipeline().metrics(ALL_METRICS).base(*BASE).hll(10) \
+        .incremental(store, segment_bytes=SEG)
+    inc = other.run(data.decode())
+    assert inc.exec_stats.segments_reused == 0
+    cold = qa.pipeline().metrics(ALL_METRICS).base(*BASE).hll(10) \
+        .run(data.decode())
+    assert_bit_identical(inc, cold)
+
+
+def test_different_engine_signature_invalidates_store(tmp_path):
+    """States frozen under other metrics / hll_p describe different
+    counter layouts or register banks — they must not be reused, and the
+    store must not crash on the signature flip."""
+    data = corpus(150, seed=10)
+    store = tmp_path / "st"
+    pipe(store=store).run(data.decode())
+    other = qa.pipeline().metrics("paper").base(*BASE).hll(10) \
+        .incremental(store, segment_bytes=SEG)
+    inc = other.run(data.decode())
+    assert inc.exec_stats.segments_reused == 0
+    cold = qa.pipeline().metrics("paper").base(*BASE).hll(10) \
+        .run(data.decode())
+    assert_bit_identical(inc, cold)
+    # the original engine now misses ITS manifest in turn (replaced)
+    back = pipe(store=store).run(data.decode())
+    assert back.exec_stats.segments_reused == 0
+
+
+def test_id_environment_shift_forces_rescan_not_wrong_registers(tmp_path):
+    """Deleting an early region renumbers every term first seen after it;
+    later segments' frozen registers hash stale ids and MUST be refused
+    (reusing them would silently corrupt the sketches)."""
+    data = corpus(400, seed=12)
+    store = tmp_path / "st"
+    pipe(store=store).run(data.decode())
+    cut = data.find(b"\n", 2000) + 1
+    cut2 = data.find(b"\n", 9000) + 1
+    edited = data[:cut] + data[cut2:]
+    inc = pipe(store=store).run(edited.decode())
+    cold = pipe().run(edited.decode())
+    assert_bit_identical(inc, cold)
+
+
+# --- API surface --------------------------------------------------------------
+
+def test_tensor_input_rejected_for_incremental(tmp_path):
+    from repro.rdf import synth_encoded
+    with pytest.raises(TypeError, match="segment store"):
+        pipe(store=tmp_path / "st").run(synth_encoded(100, seed=0))
+
+
+def test_assess_store_alias_and_execution_config(tmp_path):
+    data = bsbm_ntriples(80, seed=2)
+    res = qa.assess(data, metrics="paper", base=BASE,
+                    store=os.fspath(tmp_path / "st"), segment_bytes=SEG)
+    assert res.exec_stats.bytes_total > 0
+    res2 = qa.assess(data, metrics="paper", base=BASE,
+                     store=os.fspath(tmp_path / "st"), segment_bytes=SEG)
+    assert res2.exec_stats.segments_rescanned == 0
+    assert res2.values == res.values
+    with pytest.raises(ValueError, match="segment_bytes"):
+        qa.ExecutionConfig(segment_bytes=-1)
+
+
+def test_history_written_per_run(tmp_path):
+    data = corpus(100, seed=13)
+    store = tmp_path / "st"
+    p = pipe(store=store)
+    p.run(data.decode())
+    p.run((data + bsbm_ntriples(4, seed=44).encode()).decode())
+    from repro.core import report
+    hist = report.load_history(store / "history.jsonl")
+    assert len(hist) == 2
+    assert hist[1]["segments_reused"] >= 1
+    trend = report.to_dqv_history(hist)
+    assert trend["snapshots"] == 2 and trend["metrics"]
