@@ -1,31 +1,36 @@
-"""Incremental assessment benchmark — the append-heavy case the segment
-store exists for.
+"""Incremental assessment benchmark — append AND mutation/delete reuse.
 
   PYTHONPATH=src python -m benchmarks.fig_incremental [--smoke]
 
-Emits ``results/BENCH_incremental.json`` with four phases over one
-persistent store:
+Emits ``results/BENCH_incremental.json`` with six phases over persistent
+per-backend stores (every backend maintains its own store, so each one
+honestly rescans the changed segments through its own kernels):
 
 * **cold**   — empty store: every segment is scanned and frozen;
 * **warm**   — unchanged bytes: everything served from frozen state
   (0 bytes rescanned, 0 kernel passes);
 * **append_1pct** — ~1% of the corpus appended: only the tail segment(s)
-  rescan.  THE acceptance number: ``bytes_rescanned / bytes_total ≤ 5%``;
-* **mutate_10pct** — a contiguous ~10% region rewritten in place: the
-  framing segments rescan, plus every later segment whose term-id
-  environment shifted (HLL registers hash term ids, so a renumbered
-  segment's frozen registers are stale by construction — exactness wins
-  over reuse; appends never pay this because ids are append-only).
+  rescan.  Target: ``bytes_rescanned / bytes_total ≤ 5%``;
+* **mutate_1pct** — a contiguous ~1% region rewritten in place;
+* **mutate_10pct** — a contiguous ~10% region rewritten in place;
+* **delete_10pct** — a contiguous ~10% region deleted.
 
-Every phase cross-checks against a fresh cold assessment of the same
-bytes: metric values AND HLL register banks must be exactly equal —
-efficiency is measured, never traded for exactness.  ``passes`` per phase
-comes from the kernel-level scan counter (``kernels.count_scans`` via
-``QualityEvaluator.passes_per_chunk``): warm re-assessment performs ZERO
-data passes.
+Since plane layout v2 the HLL sketches hash term *content* (the
+``COL_*_HASH`` planes), so frozen register banks are invariant to the id
+renumbering an edit causes downstream — mutation/delete reuse is
+edit-local, like appends.  Targets: mutate_10pct and delete_10pct each
+rescan ≤ 15% of bytes (pre-v2 the renumbering cascade forced ~50%).
+
+Every phase cross-checks every backend's incremental result against a
+fresh cold assessment of the same bytes: metric values AND HLL register
+banks must be exactly equal — efficiency is measured, never traded for
+exactness.  ``passes`` per phase comes from the kernel-level scan counter
+(``kernels.count_scans`` via ``QualityEvaluator.passes_per_chunk``): warm
+re-assessment performs ZERO data passes.
 
 ``--smoke`` shrinks sizes for CI; the JSON is uploaded as a workflow
-artifact so the trajectory is recorded per-PR.
+artifact so the trajectory is recorded per-PR.  ``scripts/check.sh``
+gates on the smoke numbers (mutate_1pct must rescan ≤ 10% of bytes).
 """
 from __future__ import annotations
 
@@ -43,98 +48,161 @@ from repro.rdf import bsbm_ntriples
 from .common import save_json
 
 BSBM_NS = ("http://bsbm.example.org/",)
+BACKENDS = ("jnp", "pallas", "fused_scan")
 
 N_PRODUCTS, SMOKE_N_PRODUCTS = 16_000, 800
 SEGMENT_BYTES, SMOKE_SEGMENT_BYTES = 131_072, 16_384
 
 
-def _pipe(store=None, segment_bytes=0):
-    p = qa.pipeline().metrics("all").backend("jnp").base(*BSBM_NS)
+def _pipe(backend="jnp", store=None, segment_bytes=0):
+    p = qa.pipeline().metrics("all").backend(backend).base(*BSBM_NS)
     if store is not None:
         p = p.incremental(store, segment_bytes=segment_bytes)
     return p
 
 
-def _phase(name, store, segment_bytes, path) -> dict:
-    t0 = time.perf_counter()
-    res = _pipe(store, segment_bytes).run(path)
-    wall = time.perf_counter() - t0
+def _match(res, cold) -> tuple[bool, bool]:
+    values = bool(res.values == cold.values)
+    registers = bool(
+        set(res.registers) == set(cold.registers)
+        and all(np.array_equal(res.registers[k], cold.registers[k])
+                for k in cold.registers))
+    return values, registers
+
+
+def _phase(name, stores, segment_bytes, path) -> dict:
     t0 = time.perf_counter()
     cold = _pipe().run(path)
     cold_wall = time.perf_counter() - t0
-    s = res.exec_stats
+
+    backends = {}
+    for be in BACKENDS:
+        t0 = time.perf_counter()
+        res = _pipe(be, stores[be], segment_bytes).run(path)
+        wall = time.perf_counter() - t0
+        s = res.exec_stats
+        vals_ok, regs_ok = _match(res, cold)
+        backends[be] = dict(
+            wall_s=wall, passes=res.passes,
+            n_segments=s.chunks_total,
+            segments_reused=s.segments_reused,
+            segments_rescanned=s.segments_rescanned,
+            bytes_total=s.bytes_total,
+            bytes_rescanned=s.bytes_rescanned,
+            scan_fraction=s.bytes_rescanned / max(s.bytes_total, 1),
+            values_match_cold=vals_ok,
+            registers_match_cold=regs_ok,
+        )
+    lead = backends["jnp"]
     row = dict(
-        phase=name, wall_s=wall, cold_reference_wall_s=cold_wall,
-        n_triples=res.n_triples, passes=res.passes,
-        n_segments=s.chunks_total,
-        segments_reused=s.segments_reused,
-        segments_rescanned=s.segments_rescanned,
-        bytes_total=s.bytes_total,
-        bytes_rescanned=s.bytes_rescanned,
-        scan_fraction=s.bytes_rescanned / max(s.bytes_total, 1),
-        values_match_cold=bool(res.values == cold.values),
-        registers_match_cold=bool(
-            set(res.registers) == set(cold.registers)
-            and all(np.array_equal(res.registers[k], cold.registers[k])
-                    for k in cold.registers)),
+        phase=name, cold_reference_wall_s=cold_wall,
+        n_triples=cold.n_triples,
+        wall_s=lead["wall_s"], passes=lead["passes"],
+        n_segments=lead["n_segments"],
+        segments_reused=lead["segments_reused"],
+        segments_rescanned=lead["segments_rescanned"],
+        bytes_total=lead["bytes_total"],
+        bytes_rescanned=lead["bytes_rescanned"],
+        scan_fraction=lead["scan_fraction"],
+        values_match_cold=all(b["values_match_cold"]
+                              for b in backends.values()),
+        registers_match_cold=all(b["registers_match_cold"]
+                                 for b in backends.values()),
+        backends=backends,
     )
-    print(f"  {name:>12s}: {wall:7.3f}s (cold ref {cold_wall:6.3f}s) | "
-          f"rescanned {row['segments_rescanned']}/{row['n_segments']} segs, "
-          f"{row['scan_fraction']:6.1%} of bytes | {res.passes} passes | "
-          f"exact={row['values_match_cold'] and row['registers_match_cold']}",
+    print(f"  {name:>12s}: {row['wall_s']:7.3f}s (cold ref "
+          f"{cold_wall:6.3f}s) | rescanned "
+          f"{row['segments_rescanned']}/{row['n_segments']} segs, "
+          f"{row['scan_fraction']:6.1%} of bytes | {row['passes']} passes"
+          f" | exact×{len(BACKENDS)}="
+          f"{row['values_match_cold'] and row['registers_match_cold']}",
           flush=True)
     return row
 
 
-def run(smoke: bool = False) -> dict:
+def _region(data: bytes, start_frac: float, size_frac: float):
+    """Line-aligned [a, b) spanning ~``size_frac`` of ``data``."""
+    a = data.find(b"\n", int(len(data) * start_frac)) + 1
+    b = data.find(b"\n", a + int(len(data) * size_frac)) + 1
+    return a, b
+
+
+def run(smoke: bool = False, out: str = "BENCH_incremental.json") -> dict:
     n_products = SMOKE_N_PRODUCTS if smoke else N_PRODUCTS
     segment_bytes = SMOKE_SEGMENT_BYTES if smoke else SEGMENT_BYTES
     work = tempfile.mkdtemp(prefix="bench_incremental_")
     path = os.path.join(work, "data.nt")
-    store = os.path.join(work, "store")
+    stores = {be: os.path.join(work, f"store_{be}") for be in BACKENDS}
 
     base = bsbm_ntriples(n_products, seed=42)
     with open(path, "w") as f:
         f.write(base)
     n_bytes = os.path.getsize(path)
     print(f"corpus: {n_products} products, {n_bytes:,} bytes | "
-          f"segment target {segment_bytes:,} B", flush=True)
+          f"segment target {segment_bytes:,} B | backends: "
+          f"{', '.join(BACKENDS)} (one store each)", flush=True)
 
-    phases = [_phase("cold", store, segment_bytes, path),
-              _phase("warm", store, segment_bytes, path)]
+    phases = [_phase("cold", stores, segment_bytes, path),
+              _phase("warm", stores, segment_bytes, path)]
 
     # ~1% append
     with open(path, "a") as f:
         f.write(bsbm_ntriples(max(1, n_products // 100), seed=4242))
-    phases.append(_phase("append_1pct", store, segment_bytes, path))
+    phases.append(_phase("append_1pct", stores, segment_bytes, path))
 
-    # contiguous ~10% in-place mutation (same region size, fresh content)
+    # contiguous ~1% in-place mutation (same region size, fresh content)
     with open(path, "rb") as f:
         data = f.read()
-    a = data.find(b"\n", len(data) // 2) + 1
-    b = data.find(b"\n", a + len(data) // 10) + 1
-    replacement = bsbm_ntriples(n_products // 10, seed=777).encode()
+    a, b = _region(data, 0.25, 0.01)
+    replacement = bsbm_ntriples(max(1, n_products // 100), seed=777).encode()
     with open(path, "wb") as f:
         f.write(data[:a] + replacement + data[b:])
-    phases.append(_phase("mutate_10pct", store, segment_bytes, path))
+    phases.append(_phase("mutate_1pct", stores, segment_bytes, path))
 
-    append = next(p for p in phases if p["phase"] == "append_1pct")
-    warm = next(p for p in phases if p["phase"] == "warm")
+    # contiguous ~10% in-place mutation
+    with open(path, "rb") as f:
+        data = f.read()
+    a, b = _region(data, 0.5, 0.10)
+    replacement = bsbm_ntriples(n_products // 10, seed=778).encode()
+    with open(path, "wb") as f:
+        f.write(data[:a] + replacement + data[b:])
+    phases.append(_phase("mutate_10pct", stores, segment_bytes, path))
+
+    # contiguous ~10% delete
+    with open(path, "rb") as f:
+        data = f.read()
+    a, b = _region(data, 0.2, 0.10)
+    with open(path, "wb") as f:
+        f.write(data[:a] + data[b:])
+    phases.append(_phase("delete_10pct", stores, segment_bytes, path))
+
+    by_name = {p["phase"]: p for p in phases}
     payload = {
         "mode": "smoke" if smoke else "full",
         "corpus": {"n_products": n_products, "n_bytes": n_bytes,
                    "segment_bytes": segment_bytes},
+        "backends": list(BACKENDS),
         "phases": phases,
-        "warm_scan_fraction": warm["scan_fraction"],
-        "warm_passes": warm["passes"],
-        "append_1pct_scan_fraction": append["scan_fraction"],
-        "append_meets_5pct_target": bool(append["scan_fraction"] <= 0.05),
+        "warm_scan_fraction": by_name["warm"]["scan_fraction"],
+        "warm_passes": by_name["warm"]["passes"],
+        "append_1pct_scan_fraction": by_name["append_1pct"]["scan_fraction"],
+        "mutate_1pct_scan_fraction": by_name["mutate_1pct"]["scan_fraction"],
+        "mutate_10pct_scan_fraction": by_name["mutate_10pct"][
+            "scan_fraction"],
+        "delete_10pct_scan_fraction": by_name["delete_10pct"][
+            "scan_fraction"],
+        "append_meets_5pct_target": bool(
+            by_name["append_1pct"]["scan_fraction"] <= 0.05),
+        "mutate_10pct_meets_15pct_target": bool(
+            by_name["mutate_10pct"]["scan_fraction"] <= 0.15),
+        "delete_10pct_meets_15pct_target": bool(
+            by_name["delete_10pct"]["scan_fraction"] <= 0.15),
         "all_phases_exact": bool(all(
             p["values_match_cold"] and p["registers_match_cold"]
             for p in phases)),
     }
     shutil.rmtree(work, ignore_errors=True)
-    path_out = save_json("BENCH_incremental.json", payload)
+    path_out = save_json(out, payload)
     print(f"wrote {path_out}")
     return payload
 
@@ -143,9 +211,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI smoke runs")
+    ap.add_argument("--out", default="BENCH_incremental.json",
+                    help="results/ file name (check.sh writes a _smoke "
+                         "variant so the committed full run stays put)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, out=args.out)
 
 
 if __name__ == "__main__":
     main()
+
+

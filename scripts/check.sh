@@ -32,4 +32,22 @@ python -m repro.launch.assess --nt /tmp/check_store.nt \
     --store "$ckpt/qstore" --segment-bytes 16384
 rm -f /tmp/check_store.nt
 
+echo "== mutation-reuse smoke gate =="
+# Content-hash sketches make mutation/delete reuse edit-local; this gate
+# fails if a 1% in-place mutation ever regresses to rescanning >10% of
+# bytes (the pre-content-hash renumbering cascade rescanned ~50%).
+python -m benchmarks.fig_incremental --smoke --out BENCH_incremental_smoke.json
+python - <<'PY'
+import json
+with open("results/BENCH_incremental_smoke.json") as f:
+    bench = json.load(f)
+frac = bench["mutate_1pct_scan_fraction"]
+assert frac <= 0.10, (
+    f"mutation-reuse regression: a 1% mutation rescanned {frac:.1%} of "
+    f"bytes (gate: 10%) - did a plane/sketch change reintroduce "
+    f"id-dependence in frozen segment state?")
+assert bench["all_phases_exact"], "incremental != cold in some phase"
+print(f"mutation-reuse gate OK: 1% mutation rescans {frac:.1%} of bytes")
+PY
+
 echo "OK"

@@ -16,7 +16,8 @@ from typing import Callable, Mapping, Sequence
 from ..rdf import vocab
 from ..rdf.triple_tensor import (
     COL_S, COL_P, COL_O, COL_S_FLAGS, COL_P_FLAGS, COL_O_FLAGS,
-    COL_S_LEN, COL_P_LEN, COL_O_LEN, COL_O_DT)
+    COL_S_LEN, COL_P_LEN, COL_O_LEN, COL_O_DT,
+    COL_S_HASH, COL_P_HASH, COL_O_HASH)
 from .expr import AnyBits, Cmp, EqPlanes, Expr, HasBits
 
 # --- Predicate vocabulary (paper Def 1 Filters) ------------------------------
@@ -314,6 +315,11 @@ register(Metric(
 ))
 
 # --- Sketch-based metrics (exact-distinct via HyperLogLog, beyond paper) -----
+# Sketches hash the CONTENT-hash planes, not the id planes: a term's hash
+# column carries a 32-bit hash of its key bytes, so register banks are
+# invariant to id renumbering — the repro.store reuse lever for
+# mutations/deletes (frozen sketch state stays valid wherever the bytes
+# are unchanged, no matter how upstream edits shifted the id space).
 
 register(Metric(
     name="CN2_EXACT", dimension="conciseness",
@@ -321,7 +327,7 @@ register(Metric(
     counters=(("total", valid_triple()),),
     finalize=lambda c: _safe_ratio(c.get("sketch:spo", c["total"]),
                                    c["total"]),
-    sketches=(("spo", (COL_S, COL_P, COL_O)),),
+    sketches=(("spo", (COL_S_HASH, COL_P_HASH, COL_O_HASH)),),
 ))
 
 register(Metric(
@@ -329,7 +335,7 @@ register(Metric(
     description="Property diversity: distinct predicates (HLL estimate)",
     counters=(("total", valid_triple()),),
     finalize=lambda c: float(c.get("sketch:p", 0)),
-    sketches=(("p", (COL_P,)),),
+    sketches=(("p", (COL_P_HASH,)),),
 ))
 
 EXTENDED_METRICS = ("I1", "SV1", "SV2", "V1", "IO1", "CS1", "CM1")

@@ -29,6 +29,7 @@ the writer before returning, so a completed run's state is durable.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue as queue_mod
 import threading
 import time
@@ -64,18 +65,25 @@ class FaultInjector:
 
     ``fail_chunks``: chunk id → number of attempts that fail before one
     succeeds (a flaky worker). ``slow_chunks``: chunk id → extra seconds
-    (a straggler). ``crash_after_merges``: coordinator dies once this many
+    (a straggler; every attempt pays it — a slow *partition*).
+    ``slow_chunks_once``: chunk id → extra seconds on the FIRST attempt
+    only (a slow *worker*: the speculative backup copy runs at full
+    speed).  ``crash_after_merges``: coordinator dies once this many
     chunks have been merged (tests checkpoint/resume).
     """
     fail_chunks: Mapping[int, int] = dataclasses.field(default_factory=dict)
     slow_chunks: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    slow_chunks_once: Mapping[int, float] = dataclasses.field(
+        default_factory=dict)
     crash_after_merges: Optional[int] = None
 
     def __post_init__(self):
         self._fails_left = dict(self.fail_chunks)
+        self._slow_once_left = dict(self.slow_chunks_once)
 
     def on_eval(self, chunk_id: int) -> None:
         delay = self.slow_chunks.get(chunk_id, 0.0)
+        delay += self._slow_once_left.pop(chunk_id, 0.0)
         if delay:
             time.sleep(delay)
         left = self._fails_left.get(chunk_id, 0)
@@ -109,6 +117,11 @@ class ChunkStats:
     # chunk ids whose eval time exceeded straggler_factor × the running
     # median of chunk_eval_seconds (see ChunkScheduler.straggler_factor)
     stragglers: list = dataclasses.field(default_factory=list)
+    # speculative re-execution (ChunkScheduler(speculate=True)): chunks
+    # whose primary eval outlived the live straggler threshold and got a
+    # backup copy dispatched; wins counts backups that finished first
+    speculated: list = dataclasses.field(default_factory=list)
+    speculation_wins: int = 0
     # incremental (segment-store) runs: reuse accounting, see repro.store
     segments_reused: int = 0
     segments_rescanned: int = 0
@@ -146,6 +159,7 @@ class ChunkScheduler:
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 8, max_attempts: int = 4,
                  prefetch: int = 0, straggler_factor: float = 4.0,
+                 speculate: bool = False,
                  on_chunk: Optional[Callable] = None):
         self.evaluator = evaluator
         self.n_chunks = n_chunks
@@ -155,6 +169,19 @@ class ChunkScheduler:
         # flag chunks slower than straggler_factor × the running median of
         # per-chunk eval seconds (0/None disables detection)
         self.straggler_factor = straggler_factor
+        # speculative re-execution: when a chunk's eval outlives the SAME
+        # straggler threshold, dispatch a backup copy of the whole eval
+        # and take whichever finishes first — merge is idempotent (HLL
+        # max / counter add keyed by chunk id), so a late loser landing
+        # twice is provably harmless, exactly the Spark speculative-task
+        # story.  Applies to the sequential loop (the pipelined executor
+        # already overlaps the next chunk's ingest against a straggler).
+        self.speculate = speculate
+        if speculate and prefetch:
+            warnings.warn(
+                "speculate=True applies to the sequential chunk loop; the "
+                "pipelined executor (prefetch>0) ignores it — drop one of "
+                "the two flags", RuntimeWarning, stacklevel=2)
         # called as on_chunk(cid, counts, regs) exactly once per NEWLY
         # merged chunk (duplicate deliveries and resumed chunks are not
         # re-reported) — the segment store uses this to freeze per-chunk
@@ -168,11 +195,17 @@ class ChunkScheduler:
 
     # -- checkpoint plumbing ---------------------------------------------------
     def _compat_meta(self) -> dict:
+        from ..rdf.triple_tensor import PLANE_LAYOUT_VERSION
         ev = self.evaluator
         return {"n_chunks": self.n_chunks,
                 "metrics": [m.name for m in ev.metrics],
                 "n_plans": len(ev.plans),
                 "hll_p": ev.hll_p,
+                # register banks hash specific plane columns: a checkpoint
+                # written under another plane layout (e.g. v1 id-hashed
+                # sketches) must refuse to resume, same as repro.store's
+                # engine signature
+                "plane_layout": PLANE_LAYOUT_VERSION,
                 # dataset identity (size + content digest; None for
                 # unsized streams) — a checkpoint from a different
                 # dataset must not resume
@@ -315,8 +348,67 @@ class ChunkScheduler:
         if len(times) < 3:
             return
         med = float(np.median(times))
-        if med > 0.0 and secs > self.straggler_factor * med:
+        if (med > 0.0 and secs > self.straggler_factor * med
+                and cid not in stats.stragglers):   # may be live-flagged
             stats.stragglers.append(cid)
+
+    def _speculation_threshold(self, stats: ChunkStats) -> Optional[float]:
+        """Live straggler cutoff for speculative re-execution: the same
+        formula the post-hoc detector uses (factor × running median, ≥ 3
+        samples, 50 ms floor), applied as a timeout *while* a chunk runs.
+        None disables speculation for this chunk (no baseline yet)."""
+        times = stats.chunk_eval_seconds
+        if (not self.speculate or not self.straggler_factor
+                or len(times) < 3):
+            return None
+        med = float(np.median(times))
+        return max(self.straggler_factor * med, self.STRAGGLER_MIN_SECONDS)
+
+    def _eval_speculative(self, eval_once: Callable, cid: int,
+                          stats: ChunkStats, faults,
+                          threshold: float):
+        """Race the primary eval against a backup copy dispatched once the
+        primary outlives ``threshold``.  First completion wins; the loser
+        is abandoned (its eventual merge attempt would be ignored anyway —
+        the merge is idempotent per chunk id).  ``eval_once`` must be
+        bound to its chunk (no late-binding closures: the abandoned copy
+        may still be running after the loop advances).  Each copy counts
+        attempts/retries on a private ChunkStats; only the *decided*
+        copy's counts fold into the shared stats, so an abandoned loser
+        never mutates caller-visible state after run() returns."""
+        results: queue_mod.Queue = queue_mod.Queue()
+
+        def runner(kind: str) -> None:
+            local = ChunkStats(chunks_total=0)
+            try:
+                out = self._attempt(eval_once, cid, local, faults)
+                results.put((kind, local, True, out))
+            except BaseException as e:
+                results.put((kind, local, False, e))
+
+        threading.Thread(target=runner, args=("primary",), daemon=True,
+                         name=f"chunk-{cid}-primary").start()
+        try:
+            kind, local, ok, payload = results.get(timeout=threshold)
+        except queue_mod.Empty:
+            # primary is a straggler: flag it live and dispatch the backup
+            stats.stragglers.append(cid)
+            stats.speculated.append(cid)
+            threading.Thread(target=runner, args=("backup",), daemon=True,
+                             name=f"chunk-{cid}-backup").start()
+            kind, local, ok, payload = results.get()
+            if not ok:
+                # one copy failed — the race is still on for the other
+                stats.attempts += local.attempts
+                stats.retries += local.retries
+                kind, local, ok, payload = results.get()
+            if ok and kind == "backup":
+                stats.speculation_wins += 1
+        stats.attempts += local.attempts
+        stats.retries += local.retries
+        if not ok:
+            raise payload
+        return payload
 
     def _merge_and_checkpoint(self, state: dict, cid: int, counts, regs,
                               stats: ChunkStats,
@@ -346,8 +438,13 @@ class ChunkScheduler:
                 continue
             self._chunk_sizes[cid] = len(chunk)
             t0 = time.perf_counter()
-            counts, regs = self._attempt(
-                lambda: ev.eval_chunk(chunk), cid, stats, faults)
+            eval_once = functools.partial(ev.eval_chunk, chunk)
+            threshold = self._speculation_threshold(stats)
+            if threshold is None:
+                counts, regs = self._attempt(eval_once, cid, stats, faults)
+            else:
+                counts, regs = self._eval_speculative(
+                    eval_once, cid, stats, faults, threshold)
             self._note_eval_time(cid, time.perf_counter() - t0, stats)
             self._merge_and_checkpoint(state, cid, counts, regs, stats,
                                        faults)

@@ -12,8 +12,11 @@ TPU mapping notes:
   ``(1, COUNTS_WIDTH)`` int32 counter row plus one
   ``(2^p // 128, 128)`` int32 register block per sketch.
 * the murmur chain state is memoized per column *prefix*, so sketches whose
-  column tuples share a prefix (e.g. ``(s,)``, ``(s, p)``, ``(s, p, o)``)
-  hash each shared column once per block.
+  column tuples share a prefix hash each shared column once per block.
+  Since plane layout v2 the sketch tuples select the content-hash columns
+  (``COL_S_HASH``/``COL_P_HASH``/``COL_O_HASH`` — e.g. ``(s_hash,)``,
+  ``(s_hash, p_hash, o_hash)``); they participate in the chain like any
+  other int32 plane, so the memoization is unchanged.
 * the dense one-hot scatter-max — TPUs have no VPU scatter — is tiled over
   row sub-blocks of ``rows_tile`` so the ``(rows_tile, 2^p)`` intermediate
   stays inside a fixed VMEM budget at ANY ``p`` (the ops wrapper derives

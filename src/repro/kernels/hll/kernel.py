@@ -1,7 +1,10 @@
 """HyperLogLog register-update Pallas TPU kernel.
 
 Per block of rows: murmur-finalizer hash of the selected plane columns →
-(bucket, rank) → scatter-max into 2^p registers. TPUs have no native
+(bucket, rank) → scatter-max into 2^p registers.  The kernel is
+column-agnostic; since plane layout v2 the distinct-count sketches select
+the content-hash planes (``COL_*_HASH``), which makes the resulting
+register banks invariant to term-id renumbering. TPUs have no native
 scatter-max in the VPU, so the kernel uses the dense one-hot formulation:
 
     regs_block[m] = max_i rank[i] * [bucket[i] == m]

@@ -134,6 +134,11 @@ def main(argv=None):
                     help=">0: async pipelined chunk executor — ingest + "
                          "transfer of the next chunk overlap device "
                          "compute (1 = double buffering)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculatively re-execute straggler chunks: a "
+                         "chunk whose eval outlives the straggler "
+                         "threshold gets a backup copy; first completion "
+                         "wins (the merge is idempotent)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="incremental assessment against the persistent "
@@ -166,6 +171,8 @@ def main(argv=None):
                              checkpoint_dir=args.checkpoint_dir)
     if args.prefetch:
         pipe = pipe.pipelined(args.prefetch)
+    if args.speculate:
+        pipe = pipe.speculative()
     if args.store:
         pipe = pipe.incremental(args.store,
                                 segment_bytes=args.segment_bytes)

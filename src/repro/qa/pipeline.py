@@ -55,6 +55,7 @@ class ExecutionConfig:
     hll_p: int = hll.DEFAULT_P
     stream_triples: int = 0            # >0: streaming ingest chunk size
     prefetch: int = 0                  # >0: async pipelined chunk executor
+    speculate: bool = False            # straggler backup copies (sync loop)
     store_dir: Optional[str] = None    # segment store: incremental mode
     segment_bytes: int = 0             # target segment size (0 = default)
 
@@ -191,6 +192,14 @@ class Pipeline:
         restores the sequential executor."""
         return self._exec(prefetch=int(prefetch))
 
+    def speculative(self, flag: bool = True) -> "Pipeline":
+        """Speculatively re-execute straggler chunks: when a chunk's eval
+        outlives the straggler threshold (``straggler_factor ×`` the
+        running median), a backup copy is dispatched and the first
+        completion wins — safe for free because the merge is idempotent
+        per chunk id.  Applies to the sequential chunk loop."""
+        return self._exec(speculate=bool(flag))
+
     def incremental(self, store_dir: str, *,
                     segment_bytes: int = 0) -> "Pipeline":
         """Incremental assessment against the persistent segment store at
@@ -249,7 +258,8 @@ class Pipeline:
                               n_chunks=self.exec.chunks or 16,
                               checkpoint_dir=self.exec.checkpoint_dir,
                               checkpoint_every=self.exec.checkpoint_every,
-                              prefetch=self.exec.prefetch)
+                              prefetch=self.exec.prefetch,
+                              speculate=self.exec.speculate)
 
     # -- incremental (segment store) -------------------------------------------
     def _segments(self, dataset: Dataset):
@@ -295,7 +305,8 @@ class Pipeline:
         from ..store import assess_incremental
         return assess_incremental(
             self.evaluator(), self._segments(dataset), self.exec.store_dir,
-            base_namespaces=self.base_ns, prefetch=self.exec.prefetch)
+            base_namespaces=self.base_ns, prefetch=self.exec.prefetch,
+            speculate=self.exec.speculate)
 
     # -- ingest ----------------------------------------------------------------
     def _encode(self, text: str) -> TripleTensor:
@@ -370,6 +381,11 @@ class Pipeline:
                 mode += f" streamed@{e.stream_triples}"
         if e.prefetch:
             mode += f" async×{e.prefetch}"
+        elif e.speculate:
+            # speculation applies to the sequential loop only; with
+            # prefetch the pipelined executor runs and silently ignores
+            # it, so the repr must not claim it (repr determines execution)
+            mode += " speculative"
         if e.checkpoint_dir and not e.store_dir:
             mode += f" ckpt={e.checkpoint_dir}"
         mesh = (f" mesh={tuple(e.mesh.axis_names)}" if e.mesh is not None

@@ -19,7 +19,59 @@ import numpy as np
 
 from . import vocab
 from .parser import Term
-from .triple_tensor import TripleTensor, N_PLANES, from_columns
+from .triple_tensor import TripleTensor, N_PLANES, from_columns, mix32
+
+# --- content hashing ---------------------------------------------------------
+# 32-bit hash of a term's canonical key bytes (``Term.key()`` UTF-8).  This
+# is what the HLL sketch planes carry: hashing *content* instead of term
+# ids makes frozen register banks invariant to id renumbering (the
+# repro.store reuse lever).  The form is a position-tagged tabulation-style
+# mix — each (byte, position) pair runs through the murmur3 finalizer, the
+# per-key values XOR-combine, and the length is folded into a final mix —
+# so the whole batch vectorizes as one pass over the concatenated key blob
+# (XOR is order-free; order sensitivity comes from the position tag).
+
+_H_BYTE = np.uint32(0x9E3779B1)   # byte-lane multiplier
+_H_POS = np.uint32(0x85EBCA77)    # position-tag multiplier
+
+_mix32 = mix32    # shared murmur3 fmix32 (triple_tensor.mix32)
+
+
+def content_hash_batch(blob: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+    """uint32 content hash of each ``blob[offsets[i]:offsets[i+1]]`` slice.
+
+    ``blob``: uint8 array of concatenated key bytes; ``offsets``: int64
+    array of K+1 boundaries.  Fully vectorized: O(total bytes) regardless
+    of how key lengths are distributed.  Keys are never empty in practice
+    (``Term.key()`` always carries delimiters), but an empty slice still
+    hashes deterministically (to ``_mix32(0)``-of-length-0) for safety.
+    """
+    offsets = np.asarray(offsets, np.int64)
+    lens = np.diff(offsets).astype(np.uint32)
+    k = lens.size
+    if k == 0:
+        return np.zeros(0, np.uint32)
+    pos = (np.arange(blob.size, dtype=np.uint32)
+           - np.repeat(offsets[:-1].astype(np.uint32), np.diff(offsets)))
+    v = _mix32((blob.astype(np.uint32) + np.uint32(1)) * _H_BYTE
+               ^ pos * _H_POS)
+    acc = np.zeros(k, np.uint32)
+    nonempty = lens > 0
+    starts = offsets[:-1][nonempty]
+    if starts.size:
+        # reduceat requires non-empty slices; empty keys keep acc 0
+        acc[nonempty] = np.bitwise_xor.reduceat(v, starts)
+    return _mix32(acc ^ lens * _H_POS)
+
+
+def content_hash_keys(keys: Sequence[bytes]) -> np.ndarray:
+    """``content_hash_batch`` over a sequence of key byte strings."""
+    if not keys:
+        return np.zeros(0, np.uint32)
+    blob = np.frombuffer(b"".join(keys), np.uint8)
+    offs = np.zeros(len(keys) + 1, np.int64)
+    np.cumsum([len(kb) for kb in keys], out=offs[1:])
+    return content_hash_batch(blob, offs)
 
 
 class _IntBuf:
@@ -60,6 +112,7 @@ class TermDictionary:
         self._flags = _IntBuf()
         self._lengths = _IntBuf()
         self._dts = _IntBuf()
+        self._hashes = _IntBuf()   # content hash of key bytes (int32 view)
         self._terms_cache: list[str] | None = None
 
     def __len__(self) -> int:
@@ -77,6 +130,12 @@ class TermDictionary:
     @property
     def datatypes(self) -> np.ndarray:
         return self._dts.view()
+
+    @property
+    def hashes(self) -> np.ndarray:
+        """Per-id 32-bit content hash of the term's key bytes (int32 view
+        of the uint32 hash — planes are int32)."""
+        return self._hashes.view()
 
     @property
     def terms(self) -> list[str]:
@@ -134,6 +193,7 @@ class TermDictionary:
         self._flags.append(f)
         self._lengths.append(length)
         self._dts.append(dt)
+        self._hashes.append(int(content_hash_keys([kb])[0].view(np.int32)))
         return tid
 
     # -- vectorized fast path (repro.rdf.ingest) ------------------------------
@@ -157,6 +217,7 @@ class TermDictionary:
             self._flags.extend(np.asarray(flags))
             self._lengths.extend(np.asarray(lengths))
             self._dts.extend(np.asarray(datatypes))
+            self._hashes.extend(content_hash_keys(key_bytes).view(np.int32))
             return ids
         hits = list(map(self._ids.get, key_bytes))
         ids = np.empty(len(key_bytes), np.int64)
@@ -180,6 +241,8 @@ class TermDictionary:
             self._flags.extend(flags[new_rows])
             self._lengths.extend(lengths[new_rows])
             self._dts.extend(datatypes[new_rows])
+            self._hashes.extend(content_hash_keys(
+                [key_bytes[i] for i in new_rows]).view(np.int32))
         return ids
 
     def keys_for(self, ids) -> list[bytes]:
@@ -188,9 +251,12 @@ class TermDictionary:
         kb = self._kb
         return [kb[int(i)] for i in ids]
 
-    def plane_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Per-id (flags, lengths, datatypes) int32 views for gathers."""
-        return self._flags.view(), self._lengths.view(), self._dts.view()
+    def plane_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]:
+        """Per-id (flags, lengths, datatypes, content hashes) int32 views
+        for per-chunk plane gathers."""
+        return (self._flags.view(), self._lengths.view(), self._dts.view(),
+                self._hashes.view())
 
 
 def encode(triples: Iterable[tuple[Term, Term, Term]],
@@ -205,7 +271,7 @@ def encode(triples: Iterable[tuple[Term, Term, Term]],
         s_ids.append(d.intern(s))
         p_ids.append(d.intern(p))
         o_ids.append(d.intern(o))
-    flags, lengths, dts = d.plane_arrays()
+    flags, lengths, dts, hashes = d.plane_arrays()
     s = np.asarray(s_ids, dtype=np.int32)
     p = np.asarray(p_ids, dtype=np.int32)
     o = np.asarray(o_ids, dtype=np.int32)
@@ -213,7 +279,8 @@ def encode(triples: Iterable[tuple[Term, Term, Term]],
         return TripleTensor(np.zeros((0, N_PLANES), np.int32), 0, len(d))
     tt = from_columns(
         s, p, o, flags[s], flags[p], flags[o],
-        lengths[s], lengths[p], lengths[o], dts[o], n_terms=len(d))
+        lengths[s], lengths[p], lengths[o], dts[o], n_terms=len(d),
+        s_hash=hashes[s], p_hash=hashes[p], o_hash=hashes[o])
     return tt
 
 

@@ -667,10 +667,12 @@ def _encode_block(data: bytes, dictionary: TermDictionary) -> np.ndarray:
     class_gid[ordered] = gids
     ids = class_gid[cls]
 
-    flags, lengths, dts = dictionary.plane_arrays()
+    flags, lengths, dts, hashes = dictionary.plane_arrays()
     s, p, o = ids[:, 0], ids[:, 1], ids[:, 2]
     return from_columns(s, p, o, flags[s], flags[p], flags[o],
-                        lengths[s], lengths[p], lengths[o], dts[o]).planes
+                        lengths[s], lengths[p], lengths[o], dts[o],
+                        s_hash=hashes[s], p_hash=hashes[p],
+                        o_hash=hashes[o]).planes
 
 
 # --- public API ---------------------------------------------------------------

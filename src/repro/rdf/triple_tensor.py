@@ -26,11 +26,22 @@ COL_S_LEN = 6      # lexical length of subject (IRI chars)
 COL_P_LEN = 7
 COL_O_LEN = 8
 COL_O_DT = 9       # datatype id of object literal (vocab.DT_*)
-N_PLANES = 10
+COL_S_HASH = 10    # 32-bit content hash of the subject term's key bytes
+COL_P_HASH = 11    # ... predicate
+COL_O_HASH = 12    # ... object
+N_PLANES = 13
+
+# Bumped whenever the plane layout changes shape or meaning.  Persisted
+# state that gathers planes (the repro.store engine signature) embeds this,
+# so stores written under an older layout self-heal via a cold rescan
+# instead of colliding on column indices.
+# v2: content-hash planes (COL_*_HASH) — HLL sketches hash term *content*
+# instead of term ids, making frozen register banks renumbering-invariant.
+PLANE_LAYOUT_VERSION = 2
 
 PLANE_NAMES = [
     "s_id", "p_id", "o_id", "s_flags", "p_flags", "o_flags",
-    "s_len", "p_len", "o_len", "o_dt",
+    "s_len", "p_len", "o_len", "o_dt", "s_hash", "p_hash", "o_hash",
 ]
 
 
@@ -95,10 +106,52 @@ class TripleTensor:
         return out
 
 
+def mix32(x: np.ndarray) -> np.ndarray:
+    """murmur3 fmix32 over uint32 lanes — the ONE host-side finalizer
+    shared by the synthetic hash below and the encoder's content hashing
+    (``encoder.content_hash_batch``), so the two can never drift.
+    (The kernel oracles keep an independent copy on purpose.)"""
+    x = x.astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    x = x * np.uint32(0x85EBCA6B)
+    x ^= x >> np.uint32(13)
+    x = x * np.uint32(0xC2B2AE35)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def synthetic_term_hash(ids) -> np.ndarray:
+    """Content hash for *synthetic* terms whose only identity is their id.
+
+    ``synth_encoded`` tensors have no term strings, so their content-hash
+    planes are defined as a murmur-style mix of the id — well-distributed,
+    and injective over ids like a real content hash is over distinct terms.
+    Real datasets never use this: their hashes come from
+    ``encoder.content_hash_batch`` over the actual ``Term.key()`` bytes.
+    """
+    x = (np.asarray(ids).astype(np.uint32) + np.uint32(1)) \
+        * np.uint32(0x9E3779B1)
+    return mix32(x).view(np.int32)
+
+
 def from_columns(s_id, p_id, o_id, s_flags, p_flags, o_flags,
-                 s_len, p_len, o_len, o_dt, n_terms=0) -> TripleTensor:
+                 s_len, p_len, o_len, o_dt, n_terms=0, *,
+                 s_hash=None, p_hash=None, o_hash=None) -> TripleTensor:
+    """Stack per-position columns into a TripleTensor.
+
+    The content-hash columns default to ``synthetic_term_hash`` of the id
+    columns — correct for synthetic tensors only.  The real encode paths
+    (``encoder.encode``, ``rdf.ingest``) always pass the dictionary's
+    content hashes explicitly.
+    """
+    if s_hash is None:
+        s_hash = synthetic_term_hash(s_id)
+    if p_hash is None:
+        p_hash = synthetic_term_hash(p_id)
+    if o_hash is None:
+        o_hash = synthetic_term_hash(o_id)
     cols = [s_id, p_id, o_id, s_flags, p_flags, o_flags, s_len, p_len,
-            o_len, o_dt]
+            o_len, o_dt, s_hash, p_hash, o_hash]
     planes = np.stack([np.asarray(c, dtype=np.int32) for c in cols], axis=1)
     return TripleTensor(planes, planes.shape[0], n_terms)
 

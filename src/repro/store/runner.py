@@ -1,33 +1,38 @@
 """The incremental planner: diff segments against the store, rescan only
-what changed, merge frozen partial states for the rest.
+segments whose *content* changed, merge frozen partial states for the rest.
 
 Why results are *bit-identical* to a cold run (registers included)
 ------------------------------------------------------------------
-Counter vectors are content-determined: every predicate reads flag /
-length / datatype planes or compares term ids for equality, all invariant
-to id *numbering*.  HLL register banks are not — they hash the term-id
-planes — so a frozen bank is only valid if its rows' ids match what a
-cold run over the *current* bytes would assign.  The runner therefore
-rebuilds the canonical ("cold") dictionary on every run, without
-re-reading unchanged bytes, by replaying each segment's persisted
-**dictionary footprint** (its distinct term keys in first-appearance
-order) through ``TermDictionary.intern_keys_batch`` in segment order.
-Replaying a footprint interns exactly the terms an actual encode of those
-bytes would intern, in the same order — so by induction the dictionary
-after segment *i* equals the cold dictionary after segment *i*.  A stored
-state is reused only when the replayed ids equal the ids recorded when
-its registers were computed; otherwise the segment is rescanned against
-the (already correctly positioned) dictionary.  Consequences:
+Every plane a metric or sketch reads is **content-determined**: counter
+predicates read flag / length / datatype planes or compare term ids for
+equality (invariant to id *numbering*), and since plane layout v2 the HLL
+sketches hash the content-hash planes — a 32-bit hash of each term's
+``Term.key()`` bytes computed at ingest — instead of the id planes.  A
+frozen segment state (counter vectors + register banks) is therefore a
+pure function of the segment's bytes plus the engine signature, and is
+valid whenever its fingerprint still matches, *regardless of how upstream
+edits renumbered the id space*.  The rescan set is exactly the segments
+with no verified frozen state: new or changed content, corrupt files.
+Consequences:
 
-* **appends** never renumber existing terms (ids are append-only), so
-  every old segment is reused — the efficiency case the store exists for;
-* **deletes / mutations** renumber at most the terms first seen at or
-  after the edit; segments whose footprints replay to unchanged ids are
-  still reused, the rest are rescanned — correctness never depends on the
-  planner guessing edit semantics;
-* a **duplicate segment** (same bytes appearing twice) replays to the
-  same ids both times and is reused from one state file — counts merge
-  additively per occurrence, registers idempotently.
+* **appends** rescan only the tail segment(s) — as before;
+* **deletes / mutations** are now *edit-local* too: only the segments
+  framing the edit rescan.  (Pre-v2, registers hashed term ids, so any
+  edit that renumbered ids invalidated every downstream frozen bank —
+  a 10% mutation rescanned ~50% of bytes; now it rescans ~the edit.)
+* a **duplicate segment** (same bytes appearing twice) is reused from one
+  state file — counts merge additively per occurrence, registers
+  idempotently.
+
+The runner still rebuilds the canonical ("cold") dictionary on every run
+— without re-reading unchanged bytes — by replaying each segment's
+persisted **dictionary footprint** (its distinct term keys with metadata,
+in first-appearance order) through ``TermDictionary.intern_keys_batch``
+in segment order.  Replay is no longer a reuse *gate*; it keeps rescanned
+segments encoding against a fully-populated dictionary whose id
+assignment equals the cold run's (so persisted footprint ids stay
+meaningful for debugging and the id planes of any rescan match a cold
+encode bit-for-bit).
 
 Rescans run through the ordinary ``dist.ChunkScheduler`` (any backend,
 retries, optional ``prefetch`` pipelining); its ``on_chunk`` hook freezes
@@ -45,6 +50,8 @@ from ..core.evaluator import AssessmentResult, QualityEvaluator
 from ..dist import ChunkScheduler
 from ..rdf import TermDictionary
 from ..rdf import ingest as rdf_ingest
+from ..rdf.triple_tensor import (COL_O, COL_P, COL_S,
+                                 PLANE_LAYOUT_VERSION)
 from .segmenter import fingerprint
 from .store import FORMAT_VERSION, SegmentState, SegmentStore
 
@@ -54,11 +61,16 @@ def engine_signature(evaluator: QualityEvaluator,
     """What a frozen segment state depends on.  The backend is deliberately
     absent: all backends are bit-identical (tests/test_qa.py), so a store
     written under ``jnp`` is reusable under ``fused_scan`` and vice versa.
+    The plane-layout version IS present: frozen registers hash specific
+    plane columns, so a store written under an older layout (e.g. pre-
+    content-hash v1, whose sketches hashed term ids) must self-heal via
+    the wholesale-discard path rather than be misread.
     """
     plans = [(tuple(m.name for m in p.metrics), p.n_counters, p.program,
               p.sketch_specs) for p in evaluator.plans]
     return {
         "format": FORMAT_VERSION,
+        "plane_layout": PLANE_LAYOUT_VERSION,
         "metrics": [m.name for m in evaluator.metrics],
         "fused": bool(evaluator.fused),
         "hll_p": int(evaluator.hll_p),
@@ -66,6 +78,43 @@ def engine_signature(evaluator: QualityEvaluator,
         "plans": hashlib.blake2b(repr(plans).encode(),
                                  digest_size=8).hexdigest(),
     }
+
+
+_ID_PLANES = frozenset((COL_S, COL_P, COL_O))
+
+
+def _expr_renumbering_invariant(e) -> bool:
+    """True iff a counter expression's value is invariant under any
+    injective renumbering of term ids.  Flag/length/datatype/hash planes
+    are content-determined; id planes are numbering-dependent EXCEPT when
+    two of them are compared for equality (same term ⇔ same id under any
+    numbering)."""
+    from ..core import expr as E
+    if isinstance(e, (E.And, E.Or)):
+        return (_expr_renumbering_invariant(e.a)
+                and _expr_renumbering_invariant(e.b))
+    if isinstance(e, E.Not):
+        return _expr_renumbering_invariant(e.a)
+    if isinstance(e, E.EqPlanes):
+        return (e.plane_a in _ID_PLANES) == (e.plane_b in _ID_PLANES)
+    return e.plane not in _ID_PLANES
+
+
+def plans_renumbering_invariant(evaluator: QualityEvaluator) -> bool:
+    """Whether every plan's counters AND sketches read only content-
+    determined planes.  True for all built-ins since plane layout v2
+    (sketches hash COL_*_HASH); user-registered metrics may still sketch
+    or compare raw id planes, in which case frozen states are only valid
+    under the exact cold id assignment and the incremental planner must
+    keep the replayed-id equality gate."""
+    for pln in evaluator.plans:
+        for _, cols in pln.sketch_specs:
+            if any(c in _ID_PLANES for c in cols):
+                return False
+        for e in pln.exprs:
+            if not _expr_renumbering_invariant(e):
+                return False
+    return True
 
 
 def _bucket_rows(n: int) -> int:
@@ -98,6 +147,7 @@ def assess_incremental(evaluator: QualityEvaluator,
                        base_namespaces: Sequence[str] = (),
                        prefetch: int = 0,
                        straggler_factor: float = 4.0,
+                       speculate: bool = False,
                        history: bool = True,
                        dataset_uri: str = "urn:repro:dataset",
                        ) -> AssessmentResult:
@@ -115,6 +165,12 @@ def assess_incremental(evaluator: QualityEvaluator,
     store = SegmentStore(store_dir,
                          engine_signature(ev, base_namespaces))
     d = TermDictionary(base_namespaces)
+    # Built-in metrics are content-determined since plane layout v2, so
+    # unchanged bytes ⇒ reusable.  A user-registered metric may still
+    # sketch or threshold raw id planes — for those plans frozen state is
+    # only valid under the cold id assignment, and the replayed-id
+    # equality gate stays on (PR 4 semantics: exactness over reuse).
+    content_determined = plans_renumbering_invariant(ev)
 
     order: list[dict] = []        # segment descriptors, dataset order
     reused: list[SegmentState] = []
@@ -131,22 +187,25 @@ def assess_incremental(evaluator: QualityEvaluator,
             nbytes["total"] += len(seg)
             st = store.load_state(fp)
             if st is not None:
+                # The footprint replay keeps the shared dictionary
+                # canonical (cold-identical ids) for this run's rescans;
+                # for content-determined plans it is NOT a reuse gate —
+                # unchanged bytes ⇒ the frozen state is valid as-is.
                 ids = d.intern_keys_batch(st.keys, st.flags, st.lengths,
                                           st.datatypes)
-                if np.array_equal(ids, st.ids):
+                if content_determined or np.array_equal(ids, st.ids):
                     reused.append(st)
                     order.append({"fp": fp, "n_bytes": len(seg),
                                   "n_triples": st.n_triples})
                     continue
-                # bytes unchanged but the id environment shifted (an
-                # earlier edit renumbered terms): registers are stale,
-                # rescan below — the replay above already interned this
-                # segment's terms at their correct cold positions, so
-                # re-encoding is id-stable
+                # id-plane-reading user metric + shifted id environment:
+                # registers/counters are stale, rescan below (the replay
+                # already positioned this segment's terms at their cold
+                # ids, so re-encoding is id-stable)
             nbytes["rescanned"] += len(seg)
             tt = rdf_ingest.parse_encode(seg, dictionary=d)
             ids = _footprint_ids(tt.planes)
-            flags, lengths, dts = d.plane_arrays()
+            flags, lengths, dts, _hashes = d.plane_arrays()
             order.append({"fp": fp, "n_bytes": len(seg),
                           "n_triples": len(tt)})
             rescan_meta[cid] = {
@@ -178,7 +237,7 @@ def assess_incremental(evaluator: QualityEvaluator,
 
     sched = ChunkScheduler(ev, prefetch=prefetch,
                            straggler_factor=straggler_factor,
-                           on_chunk=on_chunk)
+                           speculate=speculate, on_chunk=on_chunk)
     _, stats = sched.run(produce())
 
     for i, st in enumerate(reused):

@@ -5,19 +5,28 @@ On-disk layout (all writes atomic: temp file + ``os.replace``)::
     <dir>/
       manifest.json        # {"format", "payload": {...}, "digest"}
       history.jsonl        # appended quality snapshots (one JSON per line)
+      .lock                # advisory flock serializing commits
       segments/
         <fingerprint>.seg  # frozen partial state of one segment
                            # (self-verifying header + npz payload)
+
+Concurrent runners (e.g. two ``--watch`` monitors) are safe: commits are
+serialized by an inter-process lock, the manifest version is monotone and
+compare-and-swapped past concurrent commits (merging their state digests
+when the engine signature matches), and garbage collection spares
+unreferenced-but-fresh state files — another runner's frozen-but-not-yet-
+committed work.
 
 A segment's frozen state is the paper's partial aggregate made durable:
 the per-plan counter vectors, every HLL sketch's register bank, the triple
 count — plus the segment's **dictionary footprint**: its distinct term
 keys (with flag/length/datatype metadata) in first-appearance order and
-the global term ids they were assigned.  Term ids are append-only within a
-run, and every run re-derives the canonical (cold) id assignment by
-replaying footprints in segment order, so a stored register bank is valid
-exactly when its recorded ids match the replayed ones — the check the
-incremental planner performs before reuse.
+the global term ids they were assigned.  Since plane layout v2, counters
+AND registers are content-determined (sketches hash the content-hash
+planes, not term ids), so a stored state is valid whenever its bytes are
+unchanged — the footprint is replayed only to keep the run's dictionary
+canonical (cold-identical id assignment for rescans), not as a reuse
+gate.
 
 Integrity is checked at every boundary, each with a *local* fallback:
 
@@ -38,17 +47,31 @@ elements so the *next* assessment can skip unchanged data entirely.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import io
 import json
 import os
+import threading
+import time
 import zipfile
 from typing import Optional, Sequence
 
 import numpy as np
 
+try:                     # POSIX: advisory inter-process lock, auto-released
+    import fcntl         # on process death (no stale-lock cleanup needed)
+except ImportError:      # non-POSIX fallback: single-process stores only
+    fcntl = None
+
 FORMAT_VERSION = 1
+
+# Unreferenced state files younger than this survive garbage collection:
+# they may be another runner's freshly-frozen, not-yet-committed work (the
+# put_state → commit window).  Stale orphans older than the grace period
+# are collected as before.
+GC_GRACE_SECONDS = 600.0
 
 
 @dataclasses.dataclass
@@ -112,11 +135,39 @@ class SegmentStore:
         self._seg_dir = os.path.join(directory, "segments")
         os.makedirs(self._seg_dir, exist_ok=True)
         self._manifest = self._load_manifest()
+        # monotone manifest version observed at load; commit() re-reads
+        # the disk manifest under the lock and CASes past whatever landed
+        # since (concurrent monitors against one store dir)
+        self._version = int(self._manifest.get("version", 0))
         # fingerprint -> state-file digest for the CURRENT manifest
         self._digests: dict[str, str] = {
             s["fp"]: s["digest"]
             for s in self._manifest.get("segments", [])}
         self._pending: dict[str, str] = {}   # fp -> digest, put this run
+
+    @property
+    def version(self) -> int:
+        """Version of the last manifest this store instance loaded or
+        committed (0 = no valid manifest)."""
+        return self._version
+
+    @contextlib.contextmanager
+    def _commit_lock(self):
+        """Exclusive inter-process lock serializing manifest commits (and
+        their GC) across concurrent runners on one store directory.  The
+        lock file is advisory and empty; ``flock`` releases it on process
+        death, so a crashed runner never wedges the store."""
+        if fcntl is None:
+            yield
+            return
+        fd = os.open(os.path.join(self.directory, ".lock"),
+                     os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            yield
+        finally:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+            os.close(fd)
 
     # -- manifest --------------------------------------------------------------
     @property
@@ -128,16 +179,7 @@ class SegmentStore:
         return os.path.join(self.directory, "history.jsonl")
 
     def _load_manifest(self) -> dict:
-        try:
-            with open(self.manifest_path) as f:
-                doc = json.load(f)
-            payload = doc["payload"]
-            want = doc["digest"]
-        except (OSError, ValueError, KeyError):
-            return {}
-        got = _digest(json.dumps(payload, sort_keys=True).encode())
-        if got != want:
-            return {}            # torn/corrupt manifest -> cold start
+        payload = self._disk_manifest_raw()  # digest-verified or {}
         if payload.get("format") != FORMAT_VERSION:
             return {}
         if payload.get("signature") != self.signature:
@@ -150,10 +192,35 @@ class SegmentStore:
         return list(self._manifest.get("segments", []))
 
     def _atomic_write(self, path: str, data: bytes) -> None:
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(data)
-        os.replace(tmp, path)
+        # unique tmp per writer: concurrent runners freezing the SAME
+        # fingerprint must not race each other's rename (content
+        # addressing makes either replacement equally correct)
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        try:
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):     # failed mid-write: don't litter
+                try:
+                    os.remove(tmp)
+                except OSError:
+                    pass
+
+    def _disk_manifest_raw(self) -> dict:
+        """The digest-verified manifest payload currently on disk, with
+        NO signature filtering (any engine's committed version counts for
+        CAS ordering) — ``{}`` when absent/torn/corrupt."""
+        try:
+            with open(self.manifest_path) as f:
+                doc = json.load(f)
+            payload = doc["payload"]
+            if (_digest(json.dumps(payload, sort_keys=True).encode())
+                    != doc["digest"]):
+                return {}
+            return payload
+        except (OSError, ValueError, KeyError):
+            return {}
 
     def commit(self, segments: Sequence[dict]) -> None:
         """Persist the manifest for the current dataset version.
@@ -163,39 +230,70 @@ class SegmentStore:
         previous manifest.  Unreferenced state files are garbage-collected
         (content addressing means a fingerprint shared across versions is
         naturally retained).
+
+        Concurrency: the whole commit (re-read → swap → GC) runs under an
+        exclusive inter-process lock, and the manifest carries a monotone
+        ``version`` that is compare-and-swapped past whatever landed on
+        disk since this store instance loaded.  A same-signature manifest
+        committed concurrently contributes its state digests, so a run
+        may reference segments a *concurrent* run froze (two monitors
+        assessing the same appended tail) instead of failing — the last
+        commit wins the manifest, but never by corrupting the loser's
+        work: the loser's states stay adoptable orphans (GC grace).
         """
-        digests = {**self._digests, **self._pending}
-        seg_docs = []
-        for s in segments:
-            fp = s["fp"]
-            if fp not in digests:
-                raise KeyError(f"no state on disk for segment {fp}")
-            seg_docs.append({**s, "digest": digests[fp]})
-        payload = {
-            "format": FORMAT_VERSION,
-            "signature": self.signature,
-            "segments": seg_docs,
-            "n_segments": len(seg_docs),
-            "n_bytes": int(sum(s["n_bytes"] for s in seg_docs)),
-            "n_triples": int(sum(s["n_triples"] for s in seg_docs)),
-        }
-        doc = {"payload": payload,
-               "digest": _digest(json.dumps(payload, sort_keys=True).encode())}
-        self._atomic_write(self.manifest_path,
-                           json.dumps(doc, indent=2).encode())
-        self._manifest = payload
-        self._digests = {s["fp"]: s["digest"] for s in seg_docs}
-        self._pending = {}
-        self._gc(set(self._digests))
+        with self._commit_lock():
+            disk = self._disk_manifest_raw()
+            if disk.get("signature") == self.signature:
+                # merge concurrently-committed same-engine state digests
+                # (ours win on conflict: we verified our own puts)
+                merged = {s["fp"]: s["digest"]
+                          for s in disk.get("segments", [])}
+                merged.update(self._digests)
+                self._digests = merged
+            version = max(self._version, int(disk.get("version", 0))) + 1
+            digests = {**self._digests, **self._pending}
+            seg_docs = []
+            for s in segments:
+                fp = s["fp"]
+                if fp not in digests:
+                    raise KeyError(f"no state on disk for segment {fp}")
+                seg_docs.append({**s, "digest": digests[fp]})
+            payload = {
+                "format": FORMAT_VERSION,
+                "version": version,
+                "signature": self.signature,
+                "segments": seg_docs,
+                "n_segments": len(seg_docs),
+                "n_bytes": int(sum(s["n_bytes"] for s in seg_docs)),
+                "n_triples": int(sum(s["n_triples"] for s in seg_docs)),
+            }
+            doc = {"payload": payload,
+                   "digest": _digest(
+                       json.dumps(payload, sort_keys=True).encode())}
+            self._atomic_write(self.manifest_path,
+                               json.dumps(doc, indent=2).encode())
+            self._manifest = payload
+            self._version = version
+            self._digests = {s["fp"]: s["digest"] for s in seg_docs}
+            self._pending = {}
+            self._gc(set(self._digests))
 
     def _gc(self, live: set) -> None:
+        """Remove state files not referenced by the manifest just written
+        — except *fresh* ones (younger than ``GC_GRACE_SECONDS``), which
+        may be a concurrent runner's frozen-but-uncommitted segments."""
+        now = time.time()
         for name in os.listdir(self._seg_dir):
             fp = name[:-4] if name.endswith(".seg") else None
-            if fp not in live:
-                try:
-                    os.remove(os.path.join(self._seg_dir, name))
-                except OSError:
-                    pass
+            if fp in live:
+                continue
+            path = os.path.join(self._seg_dir, name)
+            try:
+                if now - os.path.getmtime(path) < GC_GRACE_SECONDS:
+                    continue
+                os.remove(path)
+            except OSError:
+                pass
 
     # -- segment states --------------------------------------------------------
     # state file = one header line ("reprostore1 <payload digest>

@@ -3,6 +3,7 @@ semantics, polymorphic ingest, and declarative custom metrics."""
 import dataclasses
 import os
 import tempfile
+import time
 
 import numpy as np
 import pytest
@@ -87,6 +88,34 @@ def test_sketch_registers_bit_identical_across_backends(tensor):
         for k in ref_regs:
             np.testing.assert_array_equal(state["sketches"][k], ref_regs[k],
                                           f"{backend}:merged:{k}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_registers_renumbering_invariant_across_backends(backend):
+    """Plane layout v2: sketches hash term *content* (COL_*_HASH), not
+    ids.  Reordering the triples renumbers every term id (different
+    first-appearance order) yet must leave values AND register banks
+    bit-identical — the invariant the store's edit-local mutation/delete
+    reuse rests on.  Deterministic companion to the hypothesis
+    permutation property in test_store_property.py."""
+    from repro.rdf import parse_encode
+    from repro.rdf.triple_tensor import COL_S, COL_S_HASH
+    text = bsbm_ntriples(50, seed=14)
+    lines = text.strip().split("\n")
+    shuffled = "\n".join(lines[::-1]) + "\n"
+    # non-vacuity: the reordering really does renumber ids (id planes
+    # differ under line-reversal) while content hashes follow their terms
+    a, b = parse_encode(text), parse_encode(shuffled)
+    assert not np.array_equal(a.planes[:, COL_S], b.planes[::-1, COL_S])
+    np.testing.assert_array_equal(a.planes[:, COL_S_HASH],
+                                  b.planes[::-1, COL_S_HASH])
+    p = qa.pipeline().metrics(ALL_METRICS).backend(backend)
+    ref, res = p.run(text), p.run(shuffled)
+    assert res.values == ref.values
+    assert set(res.registers) == {"spo", "p"}
+    for k in ref.registers:
+        np.testing.assert_array_equal(res.registers[k], ref.registers[k],
+                                      f"{backend}:{k}")
 
 
 def test_fused_scan_is_one_pass(tensor):
@@ -206,6 +235,38 @@ def test_straggler_detection_flags_slow_chunks(tensor):
     _, stats2 = ChunkScheduler(ev, n_chunks=8, straggler_factor=0).run(
         tensor, faults=FaultInjector(slow_chunks={5: 0.3}))
     assert stats2.stragglers == []
+
+
+def test_speculative_reexecution_slow_copy_loses(tensor):
+    """speculate=True: a chunk whose primary eval outlives the live
+    straggler threshold gets a backup copy dispatched; the backup (not
+    slowed — a slow *worker*, not a slow partition) finishes first and
+    wins.  The merge is idempotent per chunk id, so the abandoned slow
+    copy cannot corrupt anything, and results match the fault-free run
+    bit-for-bit."""
+    from repro.core.evaluator import QualityEvaluator
+    from repro.dist import ChunkScheduler, FaultInjector
+    ev = QualityEvaluator(PAPER_METRICS, fused=True, backend="jnp")
+    ref = ev.assess(tensor)
+    sched = ChunkScheduler(ev, n_chunks=8, straggler_factor=3.0,
+                           speculate=True)
+    # chunk 5 is slow on its FIRST attempt only: the speculative backup
+    # runs at full speed and must complete long before the 2s sleep ends
+    faults = FaultInjector(slow_chunks_once={5: 2.0})
+    t0 = time.perf_counter()
+    with pytest.warns(RuntimeWarning, match="straggler"):
+        res, stats = sched.run(tensor, faults=faults)
+    assert 5 in stats.speculated
+    assert 5 in stats.stragglers          # live-flagged, not just post-hoc
+    assert stats.speculation_wins >= 1    # the slow copy lost
+    assert time.perf_counter() - t0 < 2.0, "run must not wait out the sleep"
+    assert res.values == ref.values
+    assert res.counts == ref.counts
+    # speculation off: the same fault stalls the whole run
+    _, stats2 = ChunkScheduler(ev, n_chunks=8, straggler_factor=3.0,
+                               speculate=False).run(
+        tensor, faults=FaultInjector(slow_chunks_once={5: 0.2}))
+    assert stats2.speculated == [] and stats2.speculation_wins == 0
 
 
 def test_pipelined_ingest_error_propagates(tensor):

@@ -374,19 +374,210 @@ def test_different_engine_signature_invalidates_store(tmp_path):
     assert back.exec_stats.segments_reused == 0
 
 
-def test_id_environment_shift_forces_rescan_not_wrong_registers(tmp_path):
-    """Deleting an early region renumbers every term first seen after it;
-    later segments' frozen registers hash stale ids and MUST be refused
-    (reusing them would silently corrupt the sketches)."""
+def test_early_delete_reuses_all_downstream_segments(tmp_path):
+    """THE plane-layout-v2 payoff: deleting an early region renumbers
+    every term first seen after it, but frozen sketches hash term
+    *content*, so the unaffected downstream segments are all reused —
+    only the segment(s) framing the edit rescan — and the result is
+    still bit-identical to cold (pre-v2 this renumbering cascade forced
+    a rescan of every downstream segment)."""
     data = corpus(400, seed=12)
     store = tmp_path / "st"
-    pipe(store=store).run(data.decode())
+    first = pipe(store=store).run(data.decode())
+    n_segs = first.exec_stats.chunks_total
+    assert n_segs >= 6
     cut = data.find(b"\n", 2000) + 1
     cut2 = data.find(b"\n", 9000) + 1
-    edited = data[:cut] + data[cut2:]
+    edited = data[:cut] + data[cut2:]     # delete inside the FIRST segment
     inc = pipe(store=store).run(edited.decode())
     cold = pipe().run(edited.decode())
     assert_bit_identical(inc, cold)
+    s = inc.exec_stats
+    assert s.segments_rescanned <= 2      # only the edit-framing segment(s)
+    assert s.segments_reused >= s.chunks_total - 2
+    assert s.bytes_rescanned < 0.25 * s.bytes_total
+
+
+def test_mutation_is_edit_local(tmp_path):
+    """An in-place mutation mid-corpus rescans only the segments framing
+    the rewritten region; everything downstream is reused from frozen
+    state despite the id renumbering it causes."""
+    data = corpus(400, seed=18)
+    store = tmp_path / "st"
+    pipe(store=store).run(data.decode())
+    a = data.find(b"\n", len(data) // 3) + 1
+    b = data.find(b"\n", a + len(data) // 20) + 1    # ~5% region
+    replacement = bsbm_ntriples(20, seed=999).encode()
+    edited = data[:a] + replacement + data[b:]
+    inc = pipe(store=store).run(edited.decode())
+    cold = pipe().run(edited.decode())
+    assert_bit_identical(inc, cold)
+    s = inc.exec_stats
+    assert s.segments_reused > s.segments_rescanned
+    # pre-v2 the renumbering cascade rescanned the edit plus EVERYTHING
+    # downstream of the 1/3 mark (≥ ~70% of bytes); edit-local reuse must
+    # stay clearly under that even with CDC boundary slop around the edit
+    assert s.bytes_rescanned < 0.5 * s.bytes_total
+
+
+def test_user_metric_on_id_planes_keeps_replay_gate(tmp_path):
+    """Unconditional reuse is only sound for content-determined plans.
+    A user-registered metric may still sketch raw term-id planes; for
+    such plans the incremental planner must keep the PR 4 replayed-id
+    equality gate (rescan renumbered downstream segments), preserving
+    bit-exactness at the old reuse level instead of silently serving
+    stale registers."""
+    from repro.core.metrics import Metric, register, unregister, \
+        valid_triple
+    from repro.rdf.triple_tensor import COL_S
+    from repro.store.runner import plans_renumbering_invariant
+    register(Metric(
+        name="ID_SKETCH", dimension="custom",
+        description="distinct subjects via the raw id plane",
+        counters=(("total", valid_triple()),),
+        finalize=lambda c: float(c.get("sketch:s_id", 0)),
+        sketches=(("s_id", (COL_S,)),)))
+    try:
+        names = tuple(ALL_METRICS) + ("ID_SKETCH",)
+        p_inc = (qa.pipeline().metrics(names).base(*BASE)
+                 .incremental(tmp_path / "st", segment_bytes=SEG))
+        p_cold = qa.pipeline().metrics(names).base(*BASE)
+        assert not plans_renumbering_invariant(p_inc.evaluator())
+        assert plans_renumbering_invariant(pipe().evaluator())
+
+        data = corpus(300, seed=40)
+        p_inc.run(data.decode())
+        cut = data.find(b"\n", 1500) + 1
+        cut2 = data.find(b"\n", 6000) + 1
+        edited = data[:cut] + data[cut2:]   # early delete renumbers ids
+        inc = p_inc.run(edited.decode())
+        cold = p_cold.run(edited.decode())
+        assert_bit_identical(inc, cold)
+        # the gate re-engaged: the renumbering cascade rescanned beyond
+        # the edit-framing segments (content-determined plans stay ≤ 2)
+        assert inc.exec_stats.segments_rescanned > 2
+    finally:
+        unregister("ID_SKETCH")
+
+
+def test_pre_rev_store_signature_mismatch_self_heals(tmp_path):
+    """A store written under the previous plane layout (v1: sketches
+    hashed term-id planes; its engine signature carries no/other
+    ``plane_layout``) must be rejected wholesale — cold rescan, no shape
+    collisions, and the store is rebuilt under the new signature."""
+    data = corpus(200, seed=15)
+    store = os.fspath(tmp_path / "st")
+    cold = pipe().run(data.decode())
+    pipe(store=store).run(data.decode())
+
+    # forge the pre-rev layout: rewrite manifest + states under the OLD
+    # signature (plane_layout stripped), exactly what a v1 store holds
+    sig_new = engine_signature(pipe(store=store).evaluator(), BASE)
+    assert sig_new["plane_layout"] >= 2
+    sig_old = {k: v for k, v in sig_new.items() if k != "plane_layout"}
+    old = SegmentStore(store, sig_old)
+    cur = SegmentStore(store, sig_new)
+    descrs = cur.known_segments
+    assert descrs
+    for d in descrs:
+        st = cur.load_state(d["fp"])
+        old.put_state(st)               # re-freeze under the old signature
+    old.commit([{k: s[k] for k in ("fp", "n_bytes", "n_triples")}
+                for s in descrs])
+
+    # the current engine must not reuse ANY of it — and must not crash
+    inc = pipe(store=store).run(data.decode())
+    assert inc.exec_stats.segments_reused == 0
+    assert inc.exec_stats.segments_rescanned == inc.exec_stats.chunks_total
+    assert_bit_identical(inc, cold)
+    warm = pipe(store=store).run(data.decode())   # rebuilt: warm again
+    assert warm.exec_stats.segments_rescanned == 0
+    assert_bit_identical(warm, cold)
+
+
+# --- concurrency --------------------------------------------------------------
+
+def _mini_state(fp: str, seed: int):
+    from repro.store import SegmentState
+    rng = np.random.default_rng(seed)
+    return SegmentState(
+        fingerprint=fp, n_bytes=64, n_triples=2,
+        counts=[rng.integers(0, 9, 3).astype(np.int64)],
+        regs={"spo": rng.integers(0, 5, 16).astype(np.int32)},
+        keys=[b"<http://x/a>", b"<http://x/b>"],
+        flags=np.array([9, 9], np.int32),
+        lengths=np.array([10, 10], np.int64),
+        datatypes=np.array([0, 0], np.int32),
+        ids=np.array([0, 1], np.int64))
+
+
+def test_interleaved_commits_lock_cas_and_gc_grace(tmp_path):
+    """Two runners against one store dir, interleaved through the
+    classic race window (both load, one commits while the other still
+    holds pending work).  The loser's pending state must survive the
+    winner's GC (grace), the loser's commit must CAS past the winner's
+    version AND be able to reference a segment only the winner froze
+    (merged digests), and the final manifest must verify."""
+    sig = {"format": 1, "plane_layout": 2, "test": True}
+    d = os.fspath(tmp_path / "st")
+    a_store = SegmentStore(d, sig)
+    b_store = SegmentStore(d, sig)          # both see version 0
+    assert a_store.version == b_store.version == 0
+
+    a_store.put_state(_mini_state("aaaa", 1))
+    b_store.put_state(_mini_state("bbbb", 2))
+    b_store.commit([{"fp": "bbbb", "n_bytes": 64, "n_triples": 2}])
+    assert b_store.version == 1
+    # A's pending (uncommitted) state survived B's GC — grace period
+    assert os.path.exists(os.path.join(d, "segments", "aaaa.seg"))
+
+    # A commits its own segment AND one only B put+committed: the CAS
+    # reload under the lock merges B's digests, so this must not raise
+    a_store.commit([{"fp": "aaaa", "n_bytes": 64, "n_triples": 2},
+                    {"fp": "bbbb", "n_bytes": 64, "n_triples": 2}])
+    assert a_store.version == 2
+
+    fresh = SegmentStore(d, sig)
+    assert fresh.version == 2
+    assert [s["fp"] for s in fresh.known_segments] == ["aaaa", "bbbb"]
+    for s in fresh.known_segments:          # every referenced file exists
+        assert fresh.load_state(s["fp"]) is not None
+
+
+def test_two_interleaved_monitors_one_store(tmp_path):
+    """End-to-end: two concurrent incremental runners (the --watch
+    scenario) against one store dir must both complete, leave a valid
+    manifest, and never corrupt results — the final warm run is
+    bit-identical to cold."""
+    import threading
+    data = corpus(150, seed=31)
+    edited = data + bsbm_ntriples(5, seed=32).encode()
+    store = os.fspath(tmp_path / "st")
+    gate = threading.Barrier(2, timeout=30)
+    errors = []
+
+    def monitor(ds: bytes):
+        try:
+            gate.wait()
+            for _ in range(2):
+                pipe(store=store).run(ds.decode())
+        except Exception as e:               # pragma: no cover - fail loudly
+            errors.append(e)
+
+    threads = [threading.Thread(target=monitor, args=(ds,))
+               for ds in (data, edited)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors
+    final = pipe(store=store).run(edited.decode())
+    assert_bit_identical(final, pipe().run(edited.decode()))
+    # the store is healthy and committed by somebody at version >= 4
+    st = SegmentStore(store, engine_signature(pipe(store=store).evaluator(),
+                                              BASE))
+    assert st.version >= 4
+    assert st.known_segments
 
 
 # --- API surface --------------------------------------------------------------
