@@ -32,6 +32,9 @@ python -m repro.launch.assess --nt /tmp/check_store.nt \
     --store "$ckpt/qstore" --segment-bytes 16384
 rm -f /tmp/check_store.nt
 
+echo "== daemon smoke: serve -> upload -> job -> report -> metrics =="
+python scripts/serve_smoke.py
+
 echo "== mutation-reuse smoke gate =="
 # Content-hash sketches make mutation/delete reuse edit-local; this gate
 # fails if a 1% in-place mutation ever regresses to rescanning >10% of

@@ -1,0 +1,71 @@
+"""Daemon smoke for CI / scripts/check.sh: start the service on an
+ephemeral port, upload a small N-Triples file, poll the job to
+completion, assert the DQV report parses and /metrics exposes nonzero
+assessment counters, then shut down cleanly.
+
+  PYTHONPATH=src python scripts/serve_smoke.py
+"""
+import json
+import sys
+import tempfile
+import time
+import urllib.request
+
+from repro.rdf import bsbm_ntriples
+from repro.serve import QAServer, ServerConfig
+
+BASE = ("http://bsbm.example.org/",)
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="qa-serve-smoke-")
+    srv = QAServer(ServerConfig(store_root=root, metrics="paper",
+                                base=BASE, segment_bytes=16384),
+                   port=0).start()
+    api = f"http://127.0.0.1:{srv.port}"
+    try:
+        data = bsbm_ntriples(300, seed=0).encode()
+        req = urllib.request.Request(f"{api}/datasets/smoke/data",
+                                     data=data, method="PUT")
+        with urllib.request.urlopen(req, timeout=60) as resp:
+            assert resp.status == 202, resp.status
+            job = json.load(resp)["job"]
+
+        deadline = time.time() + 300
+        while True:
+            with urllib.request.urlopen(
+                    f"{api}/datasets/smoke/jobs/{job['id']}",
+                    timeout=30) as resp:
+                j = json.load(resp)
+            if j["state"] in ("done", "failed"):
+                break
+            assert time.time() < deadline, "smoke job timed out"
+            time.sleep(0.2)
+        assert j["state"] == "done", f"job failed: {j['error']}"
+        assert j["exec_stats"]["bytes_total"] == len(data)
+
+        with urllib.request.urlopen(f"{api}/datasets/smoke/report",
+                                    timeout=30) as resp:
+            rep = json.load(resp)
+        assert rep["measurements"], "DQV report has no measurements"
+        assert rep["execStats"]["bytes_rescanned"] == len(data)
+        with urllib.request.urlopen(
+                f"{api}/datasets/smoke/report?format=nt",
+                timeout=30) as resp:
+            assert resp.read().count(b"QualityMeasurement") == 0  # NT body
+        with urllib.request.urlopen(f"{api}/healthz", timeout=30) as resp:
+            assert json.load(resp)["status"] == "ok"
+        with urllib.request.urlopen(f"{api}/metrics", timeout=30) as resp:
+            prom = resp.read().decode()
+        want = 'repro_assessments_total{dataset="smoke",state="done"} 1'
+        assert want in prom, f"missing assessment counter:\n{prom}"
+        assert 'repro_http_requests_total' in prom
+        print(f"serve smoke OK: job {job['id']} done, "
+              f"{len(rep['measurements'])} measurements, "
+              f"{j['exec_stats']['segments_rescanned']} segments scanned")
+    finally:
+        srv.close()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,7 +67,7 @@ def to_dqv(result: AssessmentResult, dataset_uri: str = "urn:repro:dataset",
             PROV + "generatedAtTime": {"@value": ts,
                                        "@type": XSD + "dateTime"},
         })
-    return {
+    out = {
         "@context": {"dqv": DQV, "prov": PROV, "dcterms": DCT, "xsd": XSD,
                      "sdmx-measure": SDMX},
         "@id": dataset_uri,
@@ -75,6 +75,31 @@ def to_dqv(result: AssessmentResult, dataset_uri: str = "urn:repro:dataset",
         "passes": result.passes,
         "measurements": measurements,
     }
+    es = _exec_stats_provenance(result)
+    if es is not None:
+        out["execStats"] = es
+    return out
+
+
+def _exec_stats_provenance(result: AssessmentResult) -> dict | None:
+    """Key execution-provenance fields for service consumers (how the
+    value was computed: incremental reuse, passes, bytes), so a report
+    served over HTTP needs no side channel to ``exec_stats``.  ``None``
+    for single-shot results, which carry no scheduler stats."""
+    s = result.exec_stats
+    if s is None:
+        return None
+    es = {
+        "mode": getattr(s, "mode", "sync"),
+        "chunks_total": int(getattr(s, "chunks_total", 0)),
+        "passes_per_chunk": int(getattr(s, "passes_per_chunk", 0)),
+    }
+    if getattr(s, "bytes_total", 0):
+        es["segments_reused"] = int(s.segments_reused)
+        es["segments_rescanned"] = int(s.segments_rescanned)
+        es["bytes_total"] = int(s.bytes_total)
+        es["bytes_rescanned"] = int(s.bytes_rescanned)
+    return es
 
 
 def to_ntriples(result: AssessmentResult,

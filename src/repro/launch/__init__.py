@@ -1,1 +1,2 @@
-"""Launchers: mesh construction, dry-run, training, serving, assessment."""
+"""Launchers: mesh construction, dry-run, training, serving, assessment,
+and the assessment-as-a-service daemon (``qa_serve``)."""

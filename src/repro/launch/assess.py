@@ -54,10 +54,27 @@ def _print_result(res, t_ingest, t_eval, dqv=False, out=None, err=None):
             print(f"{k:10s} {v:.6f}", file=out)
 
 
+def file_signature(path: str) -> tuple[int, int, int]:
+    """Change-detection signature of ``path``: ``(st_mtime_ns, st_size,
+    st_ino)`` from a single ``os.stat`` call.
+
+    Nanosecond mtime plus the inode catch same-size *atomic replaces*
+    (tmp file + ``os.replace`` swaps the inode) that a coarse
+    ``(getmtime, getsize)`` pair misses inside mtime granularity; taking
+    everything from one ``stat`` also removes the race where the file is
+    replaced between separate mtime and size calls.  Shared by the
+    ``--watch`` poll loop here and the ``repro.serve`` daemon's dataset
+    watcher.  Raises ``OSError`` when the file is missing mid-poll.
+    """
+    st = os.stat(path)
+    return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+
 def watch(pipe, path: str, *, interval: float = 2.0,
           max_assessments: int | None = None, dqv: bool = False,
           out=sys.stderr) -> int:
-    """Monitor ``path``: re-assess on every (mtime, size) change.
+    """Monitor ``path``: re-assess on every content-signature change
+    (``file_signature``: mtime_ns / size / inode).
 
     Each assessment goes through the pipeline's incremental store (so only
     changed segments are rescanned and a snapshot lands in the store's
@@ -70,7 +87,7 @@ def watch(pipe, path: str, *, interval: float = 2.0,
     runs = 0
     while max_assessments is None or runs < max_assessments:
         try:
-            sig = (os.path.getmtime(path), os.path.getsize(path))
+            sig = file_signature(path)
         except OSError:
             time.sleep(interval)
             continue
@@ -156,7 +173,34 @@ def main(argv=None):
     ap.add_argument("--watch-max", type=int, default=None, metavar="N",
                     help="stop --watch after N assessments (testing/CI)")
     ap.add_argument("--dqv", action="store_true", help="emit DQV JSON-LD")
+    ap.add_argument("--serve", type=int, default=None, metavar="PORT",
+                    help="run the multi-tenant assessment service daemon "
+                         "(repro.serve) on PORT instead of a one-shot "
+                         "run; needs --store-root (equivalent to "
+                         "python -m repro.launch.qa_serve)")
+    ap.add_argument("--store-root", default=None, metavar="DIR",
+                    help="dataset root for --serve: one segment-store "
+                         "directory per registered dataset under DIR")
     args = ap.parse_args(argv)
+
+    if args.serve is not None:
+        if not args.store_root:
+            ap.error("--serve needs --store-root (one store dir per "
+                     "dataset lives under it)")
+        from . import qa_serve
+        fwd = ["--port", str(args.serve), "--store-root", args.store_root,
+               "--metrics", args.metrics, "--backend", args.backend]
+        for b in args.base:
+            fwd += ["--base", b]
+        if args.prefetch:
+            fwd += ["--prefetch", str(args.prefetch)]
+        if args.speculate:
+            fwd += ["--speculate"]
+        if args.segment_bytes:
+            fwd += ["--segment-bytes", str(args.segment_bytes)]
+        if args.watch_interval != 2.0:
+            fwd += ["--poll-interval", str(args.watch_interval)]
+        return qa_serve.main(fwd)
 
     from repro import qa
     from repro.rdf import synth_encoded

@@ -1,0 +1,86 @@
+"""Assessment-as-a-service launcher (the ``repro.serve`` daemon).
+
+  PYTHONPATH=src python -m repro.launch.qa_serve --port 8080 \\
+      --store-root qroot/ --metrics paper --base http://ex/
+
+Then, from any DQV consumer (a datosgov-style pipeline loading reports
+into a triplestore, a dashboard, plain curl)::
+
+  curl -X PUT --data-binary @data.nt localhost:8080/datasets/my/data
+  curl localhost:8080/datasets/my/jobs
+  curl localhost:8080/datasets/my/report
+  curl localhost:8080/datasets/my/history
+  curl localhost:8080/metrics
+
+``python -m repro.launch.assess --serve PORT --store-root DIR`` forwards
+here, so either entry point works.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="multi-tenant RDF quality-assessment service over "
+                    "the incremental segment store")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address (default loopback; bind wider "
+                         "only behind something that authenticates)")
+    ap.add_argument("--store-root", required=True, metavar="DIR",
+                    help="dataset root: one registry entry + segment "
+                         "store per dataset under DIR")
+    ap.add_argument("--metrics", default="all", help="'paper'|'all'|csv")
+    ap.add_argument("--backend", choices=["jnp", "pallas", "fused_scan"],
+                    default="jnp")
+    ap.add_argument("--base", action="append", default=[],
+                    help="internal base namespace (repeatable)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="job worker pool: distinct datasets assess "
+                         "concurrently; one dataset is serialized")
+    ap.add_argument("--prefetch", type=int, default=0, metavar="N",
+                    help=">0: async pipelined chunk executor per job")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative straggler re-execution per job")
+    ap.add_argument("--segment-bytes", type=int, default=0,
+                    help="target store segment size (0 = default)")
+    ap.add_argument("--poll-interval", type=float, default=2.0,
+                    metavar="SECONDS",
+                    help="watcher cadence for registered source paths")
+    ap.add_argument("--no-watch", action="store_true",
+                    help="disable the source-path watcher (uploads and "
+                         "POST /assess still work)")
+    args = ap.parse_args(argv)
+
+    from repro.serve import QAServer, ServerConfig
+
+    cfg = ServerConfig(
+        store_root=args.store_root, metrics=args.metrics,
+        backend=args.backend, base=tuple(args.base),
+        workers=args.workers, prefetch=args.prefetch,
+        speculate=args.speculate, segment_bytes=args.segment_bytes,
+        poll_interval=args.poll_interval, watch=not args.no_watch)
+    srv = QAServer(cfg, host=args.host, port=args.port).start()
+    print(f"# repro.serve on http://{srv.host}:{srv.port} "
+          f"(store root: {srv.registry.root}, {args.workers} workers, "
+          f"backend {args.backend})", file=sys.stderr)
+    print("#   PUT  /datasets/<name>         register "
+          "{source?, alerts?, webhook?}", file=sys.stderr)
+    print("#   PUT  /datasets/<name>/data    upload N-Triples -> job",
+          file=sys.stderr)
+    print("#   GET  /datasets/<name>/report  latest DQV "
+          "(?format=nt for N-Triples)", file=sys.stderr)
+    print("#   GET  /datasets/<name>/history trend report | /metrics | "
+          "/healthz", file=sys.stderr)
+    try:
+        srv.wait()
+    except KeyboardInterrupt:
+        print("# shutting down", file=sys.stderr)
+    finally:
+        srv.close()
+
+
+if __name__ == "__main__":
+    main()

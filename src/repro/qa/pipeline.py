@@ -58,6 +58,9 @@ class ExecutionConfig:
     speculate: bool = False            # straggler backup copies (sync loop)
     store_dir: Optional[str] = None    # segment store: incremental mode
     segment_bytes: int = 0             # target segment size (0 = default)
+    dataset_uri: Optional[str] = None  # provenance URI for reports/history
+                                       # (multi-tenant serving labels each
+                                       # dataset; None = the default urn)
 
     def __post_init__(self):
         # validate here so every construction path (fluent, qa.assess
@@ -200,8 +203,8 @@ class Pipeline:
         per chunk id.  Applies to the sequential chunk loop."""
         return self._exec(speculate=bool(flag))
 
-    def incremental(self, store_dir: str, *,
-                    segment_bytes: int = 0) -> "Pipeline":
+    def incremental(self, store_dir: str, *, segment_bytes: int = 0,
+                    dataset_uri: Optional[str] = None) -> "Pipeline":
         """Incremental assessment against the persistent segment store at
         ``store_dir`` (``repro.store``): the dataset is split into
         content-defined segments, unchanged segments are served from their
@@ -210,10 +213,13 @@ class Pipeline:
         Results are bit-identical — HLL registers included — to a cold
         assessment of the same bytes, and every run appends a timestamped
         snapshot to the store's quality history.  ``segment_bytes`` tunes
-        the target segment size (0 = ``repro.store.DEFAULT_TARGET_BYTES``).
+        the target segment size (0 = ``repro.store.DEFAULT_TARGET_BYTES``);
+        ``dataset_uri`` labels history snapshots and DQV reports (the
+        multi-tenant service names each dataset; None = default urn).
         """
         return self._exec(store_dir=os.fspath(store_dir),
-                          segment_bytes=int(segment_bytes))
+                          segment_bytes=int(segment_bytes),
+                          dataset_uri=dataset_uri)
 
     def single_shot(self) -> "Pipeline":
         return self._exec(chunks=0, checkpoint_dir=None, stream_triples=0,
@@ -303,10 +309,13 @@ class Pipeline:
 
     def _run_incremental(self, dataset: Dataset) -> AssessmentResult:
         from ..store import assess_incremental
+        kw = {}
+        if self.exec.dataset_uri:
+            kw["dataset_uri"] = self.exec.dataset_uri
         return assess_incremental(
             self.evaluator(), self._segments(dataset), self.exec.store_dir,
             base_namespaces=self.base_ns, prefetch=self.exec.prefetch,
-            speculate=self.exec.speculate)
+            speculate=self.exec.speculate, **kw)
 
     # -- ingest ----------------------------------------------------------------
     def _encode(self, text: str) -> TripleTensor:

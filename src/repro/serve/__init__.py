@@ -1,0 +1,34 @@
+"""repro.serve — assessment as a service.
+
+A multi-tenant HTTP daemon over the incremental segment store: register
+datasets (one ``repro.store`` directory each), upload N-Triples or point
+at server-side files to monitor, and the service queues incremental
+assessments, serves DQV reports + quality-history trends, fires
+threshold/regression alerts, and exposes Prometheus metrics.  Stdlib
+HTTP only — no new dependencies.
+
+Quickstart::
+
+    from repro.serve import QAServer, ServerConfig
+    srv = QAServer(ServerConfig(store_root="qroot/"), port=8080).start()
+    # curl -X PUT --data-binary @data.nt localhost:8080/datasets/my/data
+    # curl localhost:8080/datasets/my/report
+
+or from the CLI::
+
+    python -m repro.launch.qa_serve --port 8080 --store-root qroot/
+"""
+from .alerts import AlertRule, parse_rule, parse_rules, post_webhook
+from .daemon import ApiError, QAServer, ServerConfig
+from .jobs import Job, JobQueue
+from .obs import Metrics
+from .registry import (Dataset, DatasetRegistry, RegistryError,
+                       UnknownDataset, validate_name)
+
+__all__ = [
+    "AlertRule", "parse_rule", "parse_rules", "post_webhook",
+    "ApiError", "QAServer", "ServerConfig",
+    "Job", "JobQueue", "Metrics",
+    "Dataset", "DatasetRegistry", "RegistryError", "UnknownDataset",
+    "validate_name",
+]

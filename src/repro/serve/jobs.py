@@ -1,0 +1,180 @@
+"""Bounded worker pool with per-dataset serialization.
+
+Two invariants the service needs from its executor:
+
+* **distinct datasets run concurrently** — the pool has ``workers``
+  threads, and jobs for different datasets are dispatched independently
+  (the paper's multi-dataset workload: many tenants, one service);
+* **one dataset never runs two assessments at once** — jobs for the same
+  dataset queue FIFO behind each other.  The segment store would survive
+  concurrent writers (flock + CAS'd manifest, built for *external*
+  monitors racing the daemon), but serializing per tenant keeps each
+  upload's job attributable to its payload and avoids burning workers on
+  redundant rescans of the same bytes.
+
+Job lifecycle: ``queued → running → done | failed``.  Jobs are held in
+memory (the durable outputs — store, history, reports, alerts — live on
+disk); a restarted daemon starts with an empty job log.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
+_SENTINEL = object()
+
+
+@dataclasses.dataclass
+class Job:
+    """One assessment request; mutated by the worker that runs it."""
+    id: int
+    dataset: str
+    trigger: str = "manual"          # "upload" | "watch" | "manual"
+    path: Optional[str] = None       # dataset bytes assessed by this job
+    state: str = QUEUED
+    enqueued_at: float = 0.0         # unix seconds
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    error: Optional[str] = None
+    # filled on success by the job body:
+    values: Optional[dict] = None
+    n_triples: Optional[int] = None
+    passes: Optional[int] = None
+    exec_stats: Optional[dict] = None
+    alerts_fired: int = 0
+
+    def to_dict(self) -> dict:
+        return {
+            "id": self.id, "dataset": self.dataset, "state": self.state,
+            "trigger": self.trigger, "path": self.path,
+            "enqueued_at": self.enqueued_at,
+            "started_at": self.started_at,
+            "finished_at": self.finished_at, "error": self.error,
+            "values": self.values, "n_triples": self.n_triples,
+            "passes": self.passes, "exec_stats": self.exec_stats,
+            "alerts_fired": self.alerts_fired,
+        }
+
+
+class JobQueue:
+    """FIFO job queue over a fixed worker pool, serialized per dataset."""
+
+    def __init__(self, workers: int = 2, fn: Callable[[Job], None] = None):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._fn = fn
+        self._lock = threading.Lock()
+        self._jobs: dict[int, Job] = {}
+        self._order: list[int] = []
+        self._pending: dict[str, collections.deque] = {}
+        self._active: set[str] = set()         # datasets currently running
+        self._ready: queue.SimpleQueue = queue.SimpleQueue()
+        self._ids = itertools.count(1)
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"qa-worker-{i}",
+                             daemon=True)
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, dataset: str, *, trigger: str = "manual",
+               path: Optional[str] = None,
+               fn: Callable[[Job], None] = None) -> Job:
+        """Enqueue one assessment of ``dataset``; returns the live Job.
+        ``fn`` overrides the queue-level job body (must be provided in
+        one place or the other)."""
+        body = fn or self._fn
+        if body is None:
+            raise ValueError("no job body: pass fn= here or to JobQueue()")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("job queue is shut down")
+            job = Job(id=next(self._ids), dataset=dataset, trigger=trigger,
+                      path=path, enqueued_at=time.time())
+            job._fn = body
+            self._jobs[job.id] = job
+            self._order.append(job.id)
+            self._pending.setdefault(dataset, collections.deque()
+                                     ).append(job)
+            self._dispatch_locked(dataset)
+        return job
+
+    def _dispatch_locked(self, dataset: str) -> None:
+        """Move the dataset's next pending job to the ready queue iff no
+        job for that dataset is running (per-dataset serialization)."""
+        pend = self._pending.get(dataset)
+        if dataset not in self._active and pend:
+            job = pend.popleft()
+            self._active.add(dataset)
+            self._ready.put(job)
+
+    # -- worker loop -----------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            job = self._ready.get()
+            if job is _SENTINEL:
+                return
+            with self._lock:
+                job.state = RUNNING
+                job.started_at = time.time()
+            try:
+                job._fn(job)
+                with self._lock:
+                    job.state = DONE
+            except Exception as e:          # noqa: BLE001 — job isolation:
+                # one bad dataset/payload must not take the daemon down
+                with self._lock:
+                    job.state = FAILED
+                    job.error = f"{type(e).__name__}: {e}"
+            finally:
+                with self._lock:
+                    job.finished_at = time.time()
+                    self._active.discard(job.dataset)
+                    self._dispatch_locked(job.dataset)
+
+    # -- introspection ---------------------------------------------------------
+    def get(self, job_id: int) -> Optional[dict]:
+        with self._lock:
+            job = self._jobs.get(job_id)
+            return job.to_dict() if job else None
+
+    def list(self, dataset: Optional[str] = None) -> list[dict]:
+        """Job snapshots in submission order (oldest first)."""
+        with self._lock:
+            return [self._jobs[i].to_dict() for i in self._order
+                    if dataset is None or self._jobs[i].dataset == dataset]
+
+    def depth(self) -> int:
+        """Jobs not yet finished (queued + running)."""
+        with self._lock:
+            return sum(1 for j in self._jobs.values()
+                       if j.state in (QUEUED, RUNNING))
+
+    def counts(self) -> dict:
+        with self._lock:
+            out = {QUEUED: 0, RUNNING: 0, DONE: 0, FAILED: 0}
+            for j in self._jobs.values():
+                out[j.state] += 1
+            return out
+
+    # -- shutdown --------------------------------------------------------------
+    def shutdown(self, wait: bool = True, timeout: float = 30.0) -> None:
+        """Stop accepting jobs and stop the workers.  Running jobs finish;
+        still-queued jobs stay ``queued`` (the durable state is on disk —
+        a restarted daemon re-assesses on the next upload/poll)."""
+        with self._lock:
+            self._closed = True
+        for _ in self._threads:
+            self._ready.put(_SENTINEL)
+        if wait:
+            deadline = time.time() + timeout
+            for t in self._threads:
+                t.join(max(0.0, deadline - time.time()))

@@ -2,6 +2,7 @@
 keys, deterministic output, N-Triples that re-parse through our own parser
 (dimension + provenance triples included), and the quality history."""
 import json
+import os
 
 import pytest
 
@@ -181,3 +182,40 @@ def test_to_dqv_history_aligns_mixed_metric_sets():
     assert trend["metrics"]["C"]["values"] == [None, None, 9.0]
     assert trend["metrics"]["C"]["delta"] == 0.0    # no adjacent pair
     assert trend["metrics"]["C"]["min"] == trend["metrics"]["C"]["max"] == 9.0
+
+
+def test_to_dqv_execution_provenance(result, tmp_path):
+    """Service consumers read reuse provenance straight off the JSON
+    report (no exec_stats side channel): nTriples, passes, and the key
+    segment-store fields.  Single-shot results (no scheduler stats) have
+    no execStats key, and the NT serialization carries measurement
+    triples only — unchanged."""
+    # single-shot result: no exec stats, no key
+    dqv = report.to_dqv(result, computed_on=TS)
+    assert dqv["nTriples"] == result.n_triples
+    assert dqv["passes"] == result.passes
+    assert "execStats" not in dqv
+
+    # incremental run: execStats carries the reuse accounting
+    from repro import qa
+    from repro.rdf import bsbm_ntriples
+    base = ("http://bsbm.example.org/",)
+    data = bsbm_ntriples(60, seed=5)
+    store = os.fspath(tmp_path / "st")
+    qa.assess(data, metrics="paper", base=base, store=store,
+              segment_bytes=8192)
+    warm = qa.assess(data + bsbm_ntriples(4, seed=50), metrics="paper",
+                     base=base, store=store, segment_bytes=8192)
+    dqv = report.to_dqv(warm, computed_on=TS)
+    es = dqv["execStats"]
+    assert es["segments_reused"] == warm.exec_stats.segments_reused >= 1
+    assert es["segments_rescanned"] == warm.exec_stats.segments_rescanned
+    assert es["bytes_total"] == warm.exec_stats.bytes_total
+    assert es["bytes_rescanned"] == warm.exec_stats.bytes_rescanned
+    assert es["mode"] == "incremental"
+    assert all(isinstance(v, (int, str)) for v in es.values())
+    json.loads(report.to_json(warm, computed_on=TS))  # serializable
+    # NT form unchanged: exactly the 6 measurement triples per metric
+    from repro.rdf.parser import parse_ntriples
+    nt = report.to_ntriples(warm, computed_on=TS)
+    assert len(parse_ntriples(nt)) == 6 * len(warm.values)

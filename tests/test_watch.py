@@ -1,0 +1,163 @@
+"""The ``--watch`` monitoring loop itself (the store beneath it is covered
+by test_store.py): change detection via the one-stat signature, the
+``max_assessments`` bound, delta printing, and tolerance of a file that
+vanishes mid-poll."""
+import io
+import os
+import threading
+import time
+
+import pytest
+
+from repro import qa
+from repro.launch.assess import file_signature, watch
+from repro.rdf import bsbm_ntriples
+
+BASE = ("http://bsbm.example.org/",)
+SEG = 8192
+
+
+def make_pipe(tmp_path):
+    return (qa.pipeline().metrics("paper").base(*BASE)
+            .incremental(os.fspath(tmp_path / "store"), segment_bytes=SEG))
+
+
+def wait_for(cond, timeout=30.0, interval=0.02):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def run_watch(pipe, path, out, max_assessments, interval=0.05,
+              timeout=60.0):
+    """Run watch() on a daemon thread with a deadline so a regression in
+    change detection fails the test instead of hanging the suite."""
+    result = {}
+
+    def target():
+        result["runs"] = watch(pipe, os.fspath(path), interval=interval,
+                               max_assessments=max_assessments, out=out)
+
+    t = threading.Thread(target=target, daemon=True)
+    t.start()
+    t.join(timeout)
+    assert not t.is_alive(), (
+        f"watch() did not terminate within {timeout}s "
+        f"(max_assessments={max_assessments}); output so far:\n"
+        + out.getvalue())
+    return result["runs"]
+
+
+# -- the signature helper ------------------------------------------------------
+
+def test_file_signature_one_stat_fields(tmp_path):
+    p = tmp_path / "d.nt"
+    p.write_text("x\n")
+    st = os.stat(p)
+    assert file_signature(p) == (st.st_mtime_ns, st.st_size, st.st_ino)
+    with pytest.raises(OSError):
+        file_signature(tmp_path / "missing.nt")
+
+
+def test_file_signature_catches_same_size_atomic_replace(tmp_path):
+    """A same-length atomic replace with a *forced identical mtime* (the
+    worst case inside mtime granularity) still changes the signature,
+    because tmp+``os.replace`` swaps the inode.  The old (getmtime,
+    getsize) pair is blind to exactly this edit."""
+    p = tmp_path / "d.nt"
+    a = '<http://e/s1> <http://e/p> "x" .\n'
+    b = '<http://e/s2> <http://e/p> "x" .\n'
+    assert len(a) == len(b)
+    p.write_text(a)
+    sig_a = file_signature(p)
+    st = os.stat(p)
+    tmp = tmp_path / "d.nt.tmp"
+    tmp.write_text(b)
+    os.utime(tmp, ns=(st.st_atime_ns, st.st_mtime_ns))
+    os.replace(tmp, p)
+    sig_b = file_signature(p)
+    assert sig_b != sig_a
+    # the pre-fix signature misses it:
+    old_style = (os.path.getmtime(p), os.path.getsize(p))
+    assert old_style == (st.st_mtime, st.st_size)
+
+
+# -- the loop ------------------------------------------------------------------
+
+def test_watch_reassesses_on_edit_and_prints_deltas(tmp_path):
+    nt = tmp_path / "d.nt"
+    nt.write_text(bsbm_ntriples(40, seed=0))
+    hist = tmp_path / "store" / "history.jsonl"
+    out = io.StringIO()
+
+    def editor():
+        # wait for the first assessment to land, then append new triples
+        assert wait_for(lambda: hist.exists()
+                        and len(hist.read_text().splitlines()) >= 1)
+        with open(nt, "a") as f:
+            f.write(bsbm_ntriples(8, seed=9))
+
+    t = threading.Thread(target=editor, daemon=True)
+    t.start()
+    runs = run_watch(make_pipe(tmp_path), nt, out, max_assessments=2)
+    t.join(10)
+    assert runs == 2
+    text = out.getvalue()
+    assert text.count("change detected") == 2
+    assert "# deltas:" in text           # printed from the second run on
+    # both snapshots went through the store
+    assert len(hist.read_text().splitlines()) == 2
+
+
+def test_watch_max_assessments_bounds_the_loop(tmp_path):
+    nt = tmp_path / "d.nt"
+    nt.write_text(bsbm_ntriples(20, seed=1))
+    out = io.StringIO()
+    runs = run_watch(make_pipe(tmp_path), nt, out, max_assessments=1)
+    assert runs == 1                     # returns after one, no hang
+    assert out.getvalue().count("change detected") == 1
+
+
+def test_watch_tolerates_file_missing_mid_poll(tmp_path):
+    nt = tmp_path / "appears-later.nt"
+    out = io.StringIO()
+
+    def creator():
+        time.sleep(0.3)                  # a few polls see OSError first
+        nt.write_text(bsbm_ntriples(20, seed=2))
+
+    t = threading.Thread(target=creator, daemon=True)
+    t.start()
+    runs = run_watch(make_pipe(tmp_path), nt, out, max_assessments=1)
+    t.join(10)
+    assert runs == 1
+    assert "change detected" in out.getvalue()
+
+
+def test_watch_detects_same_size_replace_end_to_end(tmp_path):
+    """The loop-level version of the signature test: a same-size replace
+    with a pinned mtime triggers a re-assessment."""
+    nt = tmp_path / "d.nt"
+    a = '<http://e/s1> <http://e/p> "x" .\n'
+    b = '<http://e/s2> <http://e/p> "x" .\n'
+    nt.write_text(a)
+    hist = tmp_path / "store" / "history.jsonl"
+    out = io.StringIO()
+
+    def replacer():
+        assert wait_for(lambda: hist.exists()
+                        and len(hist.read_text().splitlines()) >= 1)
+        st = os.stat(nt)
+        tmp = tmp_path / "repl.tmp"
+        tmp.write_text(b)
+        os.utime(tmp, ns=(st.st_atime_ns, st.st_mtime_ns))
+        os.replace(tmp, nt)
+
+    t = threading.Thread(target=replacer, daemon=True)
+    t.start()
+    runs = run_watch(make_pipe(tmp_path), nt, out, max_assessments=2)
+    t.join(10)
+    assert runs == 2
