@@ -133,11 +133,13 @@ def bench_section() -> str:
                    f"({f2['slope_ns_per_triple']:.1f} ns/triple slope) — "
                    "matches the paper's 'runtime grows linearly' claim.")
         out.append("")
-    f3 = _load("fig3_fig5_node_scalability.json")
+    f3 = _load("BENCH_mesh.json")
     if f3:
-        s = ", ".join(f"{r['workers']}w: S={r['speedup']:.2f} "
+        s = ", ".join(f"{r['devices']}d: S={r['speedup']:.2f} "
                       f"E={r['efficiency']:.2f}" for r in f3["rows"])
-        out.append(f"**Fig 3/5 node scalability** ({f3['method']}): {s}")
+        out.append(f"**Fig 3/5 node scalability** ({f3['method']}): {s}; "
+                   f"all rungs bit-identical to 1 device = "
+                   f"{f3['all_rungs_bit_identical']}")
         out.append("")
     f4 = _load("fig4_per_metric.json")
     if f4:

@@ -58,12 +58,13 @@ def main():
         print(f"  linear-fit R² = {p['linear_fit_r2']:.4f}")
 
     if only is None or "fig3" in only:
-        _section("Fig 3 + Fig 5 — node scalability (speedup & efficiency)")
+        _section("Fig 3 + Fig 5 — node scalability (1→N device mesh)")
         from . import fig3_node_scalability
-        p = fig3_node_scalability.run(quick=args.quick)
+        p = fig3_node_scalability.run(smoke=args.quick)
         for r in p["rows"]:
-            print(f"  workers={r['workers']}: wall={r['wall_s']:7.3f}s "
-                  f"S={r['speedup']:5.2f} E={r['efficiency']:5.2f}")
+            print(f"  devices={r['devices']}: wall={r['wall_s']:7.3f}s "
+                  f"S={r['speedup']:5.2f} E={r['efficiency']:5.2f} "
+                  f"bit-identical={r['bit_identical']}")
         print(f"  ({p['method']})")
 
     if only is None or "fig4" in only:

@@ -53,4 +53,11 @@ assert bench["all_phases_exact"], "incremental != cold in some phase"
 print(f"mutation-reuse gate OK: 1% mutation rescans {frac:.1%} of bytes")
 PY
 
+echo "== mesh scale-out smoke gate =="
+# Real 1->2 fake-device sweep: aborts unless every rung's values AND HLL
+# register banks are bit-identical to the 1-device run (uneven shards
+# included — the corpus row count is not divisible by the device count).
+python -m benchmarks.fig3_node_scalability --smoke --out BENCH_mesh_smoke.json
+rm -f results/BENCH_mesh_smoke.json
+
 echo "OK"

@@ -5,10 +5,28 @@ the real API surface of the installed version).
 ``shard_map``: jax ≥ 0.5 exposes ``jax.shard_map(..., check_vma=...)``;
 0.4.x has ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
 This wrapper presents the new-style keyword on both.
+
+``mesh_structural_key``: a hashable structural identity for a device
+mesh.  ``Mesh.__eq__`` / ``__hash__`` semantics have shifted across jax
+versions (identity-ish in some, structural-but-expensive in others), so
+anything that caches on "the same mesh" — e.g. the ``repro.qa`` jitted-
+engine cache — must key on the structure itself, or two meshes rebuilt
+per call (a daemon constructing one per job, a benchmark per rung) miss
+the cache and silently re-jit the whole engine.
 """
 from __future__ import annotations
 
 import jax
+
+
+def mesh_structural_key(mesh) -> tuple | None:
+    """``(axis_names, devices.shape, flat device ids)`` — equal iff two
+    meshes run the same SPMD program on the same hardware.  None for None
+    (the single-device case)."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
 
 if hasattr(jax, "shard_map"):
     def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):

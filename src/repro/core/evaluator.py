@@ -14,10 +14,23 @@ Execution modes:
 * ``mesh``: when given, rows are sharded over *all* mesh axes (quality
   assessment is purely data-parallel — every chip is a Spark "worker") and
   counters/sketches are reduced with ``psum``/``pmax`` inside ``shard_map``.
+  Every backend distributes, the ``fused_scan`` megakernel included: the
+  local pass runs a per-device Pallas grid over that device's row shard,
+  then counter vectors ``psum`` and register banks ``pmax`` across every
+  axis.  ``device_planes`` pads rows up to a device multiple first —
+  padding rows carry zero flag planes, so an uneven final shard is
+  invisible to counters and sketches alike.  ``eval_segment_batch``
+  additionally distributes *whole segments* (one independent dataset
+  slice per device slot — the embarrassingly-parallel axis incremental
+  rescans use, where per-segment results must come back unreduced).
 
 ``AssessmentResult.passes`` reports ACTUAL data passes: each op wrapper
 that streams the planes once records a scan (``kernels.record_scan``), and
-``passes_per_chunk`` traces the pass functions under that counter.
+``passes_per_chunk`` traces the pass functions under that counter.  Under
+a mesh the *mesh-mapped* function is traced — the SPMD program every
+device runs — so the count reflects what actually executes (a replicated
+or side-scanning mesh path would show up), not just the single-device
+body it was built from.
 """
 from __future__ import annotations
 
@@ -163,22 +176,39 @@ class QualityEvaluator:
 
     @functools.cached_property
     def passes_per_chunk(self) -> int:
-        """ACTUAL HBM data passes one chunk evaluation performs, measured by
-        tracing every plan's (local) pass function under the scan counter —
-        1 per plan for jnp/fused_scan-style fused scans, ``1 + S`` for the
-        two-kernel pallas path with S sketches."""
+        """ACTUAL HBM data passes one chunk evaluation performs, measured
+        by tracing every plan's pass function under the scan counter — 1
+        per plan for jnp/fused_scan-style fused scans, ``1 + S`` for the
+        two-kernel pallas path with S sketches.
+
+        Mesh-aware: with a mesh, the traced function is the *mesh-mapped*
+        one (``shard_map`` body + cross-axis reductions) — the SPMD
+        program each device executes over its row shard.  One recorded
+        scan there means every device streams its shard once, i.e. the
+        sharded dataset streams HBM→VMEM once collectively; if the mesh
+        path ever replicated work or added a side-scan, this measurement
+        (unlike tracing only the single-device body) would report it.
+        Fresh (un-jit-cached) functions are traced on purpose: a jit
+        cache hit would skip tracing and silently count zero.
+        """
         shape = jax.ShapeDtypeStruct((max(8, self._row_multiple()), N_PLANES),
                                      jnp.int32)
         with count_scans() as box:
             for pln in self.plans:
-                jax.eval_shape(self._local_pass_fn(pln), shape)
+                fn = (self._local_pass_fn(pln) if self.mesh is None
+                      else self._pass_fn(pln))
+                jax.eval_shape(fn, shape)
         return box[0]
+
+    def _shard_count(self) -> int:
+        """Row shards a mesh splits a chunk into (1 without a mesh)."""
+        if self.mesh is None:
+            return 1
+        return int(np.prod(self.mesh.devices.shape))
 
     def _row_multiple(self) -> int:
         per_device = 8 if self.backend in ("pallas", "fused_scan") else 1
-        if self.mesh is None:
-            return per_device
-        return int(np.prod(self.mesh.devices.shape)) * per_device
+        return self._shard_count() * per_device
 
     def device_planes(self, tensor: TripleTensor):
         padded = tensor.padded_to(max(1, self._row_multiple()))
@@ -240,6 +270,76 @@ class QualityEvaluator:
     def eval_chunk(self, chunk: TripleTensor):
         arr = self.device_planes(chunk)
         return self.materialize_chunk(self.dispatch_chunk(arr))
+
+    # -- batched independent segments (mesh scale-out of incremental runs) -----
+    def _batch_pass_fn(self, pln: Plan):
+        """One plan's pass over a ``(B, R, N_PLANES)`` stack of independent
+        row blocks → per-block ``((B, n_counters), {sketch: (B, 2^p)})``.
+
+        Under a mesh the BATCH dimension is sharded (one whole block per
+        device slot, ``P(axes)`` in and out) and nothing is cross-device
+        reduced — unlike ``_pass_fn``, which shards the rows of ONE block
+        and ``psum``/``pmax``-merges.  This is the execution shape of the
+        paper's Spark stage before the ``reduce``: independent partitions
+        assessed in parallel, partial states kept separate (the segment
+        store must freeze each one).
+        """
+        local_pass = self._local_pass_fn(pln)
+
+        def batch_pass(planes):                 # (b, R, P) local blocks
+            outs = [local_pass(planes[i]) for i in range(planes.shape[0])]
+            counts = jnp.stack([c for c, _ in outs])
+            regs = {k: jnp.stack([r[k] for _, r in outs])
+                    for k in outs[0][1]}
+            return counts, regs
+
+        if self.mesh is None:
+            return jax.jit(batch_pass)
+        shard_batch = P(tuple(self.mesh.axis_names))
+        mapped = compat.shard_map(
+            batch_pass, mesh=self.mesh,
+            in_specs=(shard_batch,),
+            out_specs=(shard_batch,
+                       {s: shard_batch for s, _ in pln.sketch_specs}),
+            check_vma=False,
+        )
+        return jax.jit(mapped)
+
+    @functools.cached_property
+    def _batch_pass_fns(self):
+        return [self._batch_pass_fn(p) for p in self.plans]
+
+    def eval_segment_batch(self, tensors: Sequence[TripleTensor]) -> list:
+        """Evaluate ``B`` independent tensors in one dispatch; returns a
+        list of per-tensor ``(counts, regs)`` in input order — the same
+        pair ``eval_chunk`` yields, kept separate per tensor.
+
+        The batch is padded with all-zero blocks up to a shard-count
+        multiple and every block to one common 8-multiple row height;
+        zero rows carry no flag bits, so padding is invisible to counters
+        and sketches (asserted against per-tensor ``eval_chunk`` in
+        tests/test_multidevice.py).
+        """
+        if not tensors:
+            return []
+        pad_b = (-len(tensors)) % self._shard_count()
+        rows = max(8, max(((t.n_rows + 7) // 8) * 8 for t in tensors))
+        stack = np.zeros((len(tensors) + pad_b, rows, N_PLANES), np.int32)
+        for i, t in enumerate(tensors):
+            stack[i, :t.n_rows] = t.planes
+        arr = jnp.asarray(stack)
+        if self.mesh is not None:
+            arr = jax.device_put(arr, NamedSharding(
+                self.mesh, P(tuple(self.mesh.axis_names))))
+        outs = [fn(arr) for fn in self._batch_pass_fns]
+        results = []
+        for i in range(len(tensors)):
+            counts = [np.asarray(c[i], np.int64) for c, _ in outs]
+            regs: dict = {}
+            for _, r in outs:
+                regs.update({k: np.asarray(v[i]) for k, v in r.items()})
+            results.append((counts, regs))
+        return results
 
     @staticmethod
     def merge_chunk(state: dict, chunk_id: int, counts, regs) -> dict:

@@ -94,6 +94,8 @@ def _exec_stats_provenance(result: AssessmentResult) -> dict | None:
         "chunks_total": int(getattr(s, "chunks_total", 0)),
         "passes_per_chunk": int(getattr(s, "passes_per_chunk", 0)),
     }
+    if getattr(s, "devices", 1) > 1:    # mesh runs: record the shard count
+        es["devices"] = int(s.devices)
     if getattr(s, "bytes_total", 0):
         es["segments_reused"] = int(s.segments_reused)
         es["segments_rescanned"] = int(s.segments_rescanned)

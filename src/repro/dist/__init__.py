@@ -15,6 +15,15 @@ properties for the JAX engine:
   only per-chunk host synchronization is one deferred materialization —
   merge order, retry accounting, and checkpoint/resume state are
   bit-for-bit identical to the sequential loop.
+
+  The scheduler is mesh-transparent: when its evaluator carries a device
+  mesh, ``device_planes`` lays each chunk out across the mesh with ONE
+  ``NamedSharding`` ``device_put`` (on the producer thread when
+  pipelined), the per-chunk result arrives already ``psum``/``pmax``-
+  reduced, and everything host-side — merge order, prefetch, speculation,
+  straggler detection, checkpoint/resume — runs unchanged, so a sharded
+  run's state files and results are bit-identical to the 1-device run's
+  (``ChunkStats.devices`` records the shard count for provenance).
 * ``FaultInjector`` / ``WorkerFailure`` — deterministic failure injection
   (flaky workers, stragglers, coordinator crashes) for tests and drills.
 * ``compressed_psum`` — quantized cross-device mean-reduction with error
@@ -105,6 +114,7 @@ class ChunkStats:
     chunks_total: int
     attempts: int = 0            # eval attempts in THIS run (incl. retries)
     retries: int = 0
+    devices: int = 1             # mesh row shards per chunk (1 = no mesh)
     resumed_from: Optional[int] = None  # merge count at the restored ckpt
     checkpoints_written: int = 0
     mode: str = "sync"           # "sync" | "pipelined"
@@ -271,7 +281,8 @@ class ChunkScheduler:
         state, resumed = self._restore(state)
         stats = ChunkStats(chunks_total=chunks_total, resumed_from=resumed,
                            mode="pipelined" if self.prefetch else "sync",
-                           passes_per_chunk=ev.passes_per_chunk)
+                           passes_per_chunk=ev.passes_per_chunk,
+                           devices=getattr(ev, "_shard_count", lambda: 1)())
 
         self._last_saved = len(state["chunks_done"])
         loop = self._run_pipelined if self.prefetch else self._run_sync

@@ -20,6 +20,14 @@ def fused_scan(planes, program, n_counters: int,
     no VALID/KIND bits, so padding is invisible to every counter, and the
     kernel zeroes padded rows' ranks (s_flags == 0 ⇒ not a real row) so
     registers match the unpadded fold bit-for-bit.
+
+    Mesh-ready: traced inside ``shard_map`` (the evaluator's mesh path),
+    ``planes`` is one device's row shard and the grid/blocking below is
+    per-device — ``block_n`` shrinks to the local shard when small, and
+    the zero-pad invisibility above is exactly what makes an uneven
+    global row count (pad-to-device-multiple) safe: every device's
+    counters/registers are computed as if the padding did not exist, so
+    the cross-device ``psum``/``pmax`` equals the single-device scan.
     """
     if not sketch_specs:        # pure-counter plan: the qap_count kernel IS
         return (fused_count(planes, program, n_counters, block_n=block_n,

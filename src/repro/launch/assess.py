@@ -156,6 +156,11 @@ def main(argv=None):
                          "chunk whose eval outlives the straggler "
                          "threshold gets a backup copy; first completion "
                          "wins (the merge is idempotent)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="DEVICES",
+                    help=">0: shard every scan's rows over this many "
+                         "devices (1-D data-parallel mesh; counters "
+                         "psum-reduced, HLL registers pmax-reduced — "
+                         "bit-identical to the local run). 0 = no mesh")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--store", default=None, metavar="DIR",
                     help="incremental assessment against the persistent "
@@ -220,6 +225,9 @@ def main(argv=None):
     if args.store:
         pipe = pipe.incremental(args.store,
                                 segment_bytes=args.segment_bytes)
+    if args.mesh:
+        from .mesh import make_assessment_mesh
+        pipe = pipe.shard(make_assessment_mesh(args.mesh))
     if args.base:
         pipe = pipe.base(*args.base)
 

@@ -24,6 +24,18 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_assessment_mesh(devices: int = 0):
+    """1-D data-parallel mesh for quality assessment (row sharding only —
+    the evaluator splits chunk rows over every axis).  ``devices=0`` uses
+    all visible devices; pass an explicit count to use a subset (e.g. a
+    1→N scalability sweep)."""
+    n = devices or len(jax.devices())
+    avail = len(jax.devices())
+    if not 1 <= n <= avail:
+        raise ValueError(f"devices must be in [1, {avail}], got {n}")
+    return jax.make_mesh((n,), ("data",), devices=jax.devices()[:n])
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes used for batch/data parallelism (everything except 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")

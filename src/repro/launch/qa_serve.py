@@ -46,6 +46,9 @@ def main(argv=None):
                     help="speculative straggler re-execution per job")
     ap.add_argument("--segment-bytes", type=int, default=0,
                     help="target store segment size (0 = default)")
+    ap.add_argument("--max-queued", type=int, default=64,
+                    help="waiting-job cap: further submissions get HTTP "
+                         "429 + Retry-After (0 = unbounded)")
     ap.add_argument("--poll-interval", type=float, default=2.0,
                     metavar="SECONDS",
                     help="watcher cadence for registered source paths")
@@ -61,7 +64,8 @@ def main(argv=None):
         backend=args.backend, base=tuple(args.base),
         workers=args.workers, prefetch=args.prefetch,
         speculate=args.speculate, segment_bytes=args.segment_bytes,
-        poll_interval=args.poll_interval, watch=not args.no_watch)
+        poll_interval=args.poll_interval, watch=not args.no_watch,
+        max_queued=args.max_queued)
     srv = QAServer(cfg, host=args.host, port=args.port).start()
     print(f"# repro.serve on http://{srv.host}:{srv.port} "
           f"(store root: {srv.registry.root}, {args.workers} workers, "

@@ -21,6 +21,7 @@ import functools
 import os
 from typing import Any, Iterable, Optional, Sequence, Union
 
+from .. import compat
 from ..core.evaluator import (AssessmentResult, QualityEvaluator,
                               run_single_shot)
 from ..core.metrics import (ALL_METRICS, EXTENDED_METRICS, PAPER_METRICS,
@@ -112,15 +113,41 @@ def _resolve_metrics(spec) -> tuple[str, ...]:
     return tuple(names)
 
 
+class _MeshKey:
+    """Hashable cache identity for a mesh: STRUCTURAL, not object
+    identity.  ``Mesh.__eq__``/``__hash__`` semantics have varied across
+    jax versions, and callers routinely rebuild a structurally identical
+    mesh per ``assess()`` call (a daemon per job, a benchmark per rung) —
+    keying the engine cache on the Mesh object itself would miss on every
+    such rebuild and re-jit the whole engine.  Two meshes with the same
+    ``(axis_names, devices.shape, device ids)`` run the same SPMD program
+    on the same hardware, so they must share one jitted evaluator."""
+
+    __slots__ = ("mesh", "key")
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.key = compat.mesh_structural_key(mesh)
+
+    def __hash__(self):
+        return hash(self.key)
+
+    def __eq__(self, other):
+        return isinstance(other, _MeshKey) and self.key == other.key
+
+
 @functools.lru_cache(maxsize=16)
-def _evaluator_for(metrics_key: tuple, backend: str, fused: bool, mesh: Any,
-                   hll_p: int, interpret: bool) -> QualityEvaluator:
+def _evaluator_for(metrics_key: tuple, backend: str, fused: bool,
+                   mesh_key: _MeshKey, hll_p: int,
+                   interpret: bool) -> QualityEvaluator:
     # keyed on the Metric OBJECTS (not names), so re-registering a name
     # yields a fresh engine rather than a stale cached plan, and ONLY on
     # the engine-relevant exec fields — scheduler-only settings (chunks,
-    # checkpoint_dir, ...) must not defeat jit reuse
+    # checkpoint_dir, ...) must not defeat jit reuse.  The mesh arrives
+    # wrapped in _MeshKey (structural identity): the first mesh seen for
+    # a given structure is the one the cached engine keeps using.
     return QualityEvaluator([m.name for m in metrics_key], fused=fused,
-                            backend=backend, mesh=mesh, hll_p=hll_p,
+                            backend=backend, mesh=mesh_key.mesh, hll_p=hll_p,
                             interpret=interpret)
 
 
@@ -242,8 +269,8 @@ class Pipeline:
         functions instead of re-planning and re-compiling each time."""
         metrics_key = tuple(REGISTRY[n] for n in self.metric_names)
         e = self.exec
-        return _evaluator_for(metrics_key, e.backend, e.fused, e.mesh,
-                              e.hll_p, e.interpret)
+        return _evaluator_for(metrics_key, e.backend, e.fused,
+                              _MeshKey(e.mesh), e.hll_p, e.interpret)
 
     def run(self, dataset: Dataset) -> AssessmentResult:
         """Ingest ``dataset`` and execute; chunked/streaming runs attach a

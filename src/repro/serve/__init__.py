@@ -20,7 +20,7 @@ or from the CLI::
 """
 from .alerts import AlertRule, parse_rule, parse_rules, post_webhook
 from .daemon import ApiError, QAServer, ServerConfig
-from .jobs import Job, JobQueue
+from .jobs import Job, JobQueue, QueueFull
 from .obs import Metrics
 from .registry import (Dataset, DatasetRegistry, RegistryError,
                        UnknownDataset, validate_name)
@@ -28,7 +28,7 @@ from .registry import (Dataset, DatasetRegistry, RegistryError,
 __all__ = [
     "AlertRule", "parse_rule", "parse_rules", "post_webhook",
     "ApiError", "QAServer", "ServerConfig",
-    "Job", "JobQueue", "Metrics",
+    "Job", "JobQueue", "QueueFull", "Metrics",
     "Dataset", "DatasetRegistry", "RegistryError", "UnknownDataset",
     "validate_name",
 ]

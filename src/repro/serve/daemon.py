@@ -36,6 +36,10 @@ Safety properties:
   previous payload never reads a torn file;
 * per-dataset assessments are serialized by the job queue while distinct
   datasets run concurrently on the worker pool;
+* the queue is bounded (``max_queued``): job-enqueuing endpoints answer
+  429 with a ``Retry-After`` header once that many jobs are waiting, and
+  each rejection is counted in ``repro_jobs_rejected_total`` — clients
+  faster than the workers see backpressure, not unbounded memory growth;
 * each dataset's store dir is an ordinary ``repro.store`` directory —
   external CLI monitors (``--store <root>/<name>/store``) may run
   concurrently with daemon jobs; commits are flock-serialized and the
@@ -57,7 +61,7 @@ from typing import Optional
 from urllib.parse import parse_qs, urlsplit
 
 from . import alerts as alerts_mod
-from .jobs import Job, JobQueue
+from .jobs import Job, JobQueue, QueueFull
 from .obs import Metrics
 from .registry import DatasetRegistry, RegistryError, UnknownDataset
 from ..launch.assess import file_signature
@@ -70,11 +74,14 @@ MAX_UPLOAD_BYTES = 1 << 31          # refuse absurd Content-Length up front
 
 
 class ApiError(Exception):
-    """An HTTP-visible request failure."""
+    """An HTTP-visible request failure.  ``headers`` are extra response
+    headers (e.g. ``Retry-After`` on a 429)."""
 
-    def __init__(self, status: int, message: str):
+    def __init__(self, status: int, message: str,
+                 headers: Optional[dict] = None):
         super().__init__(message)
         self.status = status
+        self.headers = headers or {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +98,8 @@ class ServerConfig:
     segment_bytes: int = 0            # store segment target (0 = default)
     poll_interval: float = 2.0        # source-file watcher cadence
     watch: bool = True                # poll registered source paths
+    max_queued: int = 64              # waiting-job cap -> HTTP 429
+                                      # (0 = unbounded, pre-cap behaviour)
 
 
 def _now_iso() -> str:
@@ -114,7 +123,8 @@ class QAServer:
         self.config = config
         self.registry = DatasetRegistry(config.store_root)
         self.obs = Metrics()
-        self.jobs = JobQueue(workers=config.workers)
+        self.jobs = JobQueue(workers=config.workers,
+                             max_queued=config.max_queued)
         pipe = (qa.pipeline().metrics(config.metrics)
                 .backend(config.backend))
         if config.prefetch:
@@ -180,11 +190,12 @@ class QAServer:
                     continue              # absent/mid-replace: next poll
                 if self._watch_sigs.get(name) == sig:
                     continue
-                self._watch_sigs[name] = sig
                 try:
                     self.submit_assessment(name, trigger="watch")
                 except (ApiError, RegistryError, UnknownDataset):
-                    continue
+                    continue      # incl. 429 queue-full: sig NOT recorded,
+                                  # so the change is retried next poll
+                self._watch_sigs[name] = sig
 
     # -- assessment jobs -------------------------------------------------------
     def _job_path(self, name: str, trigger: str) -> str:
@@ -205,8 +216,14 @@ class QAServer:
 
     def submit_assessment(self, name: str, trigger: str = "manual") -> Job:
         path = self._job_path(name, trigger)
-        return self.jobs.submit(name, trigger=trigger, path=path,
-                                fn=self._execute)
+        try:
+            return self.jobs.submit(name, trigger=trigger, path=path,
+                                    fn=self._execute)
+        except QueueFull as e:
+            self.obs.inc("repro_jobs_rejected_total", dataset=name)
+            retry = max(1, int(round(e.retry_after)))
+            raise ApiError(429, f"{e} — retry in ~{retry}s",
+                           headers={"Retry-After": str(retry)}) from None
 
     def _execute(self, job: Job) -> None:
         """Job body (runs on a worker thread): one incremental assessment
@@ -507,6 +524,7 @@ class _Handler(http.server.BaseHTTPRequestHandler):
         split = urlsplit(self.path)
         route = "unknown"
         code, body, ctype = 404, _err("not found"), JSON_CT
+        headers: dict = {}
         try:
             for m, name, pat, fn in _ROUTES:
                 if m != method:
@@ -522,6 +540,7 @@ class _Handler(http.server.BaseHTTPRequestHandler):
                     code, body = 405, _err(f"method {method} not allowed")
         except ApiError as e:
             code, body, ctype = e.status, _err(str(e)), JSON_CT
+            headers = e.headers
         except RegistryError as e:
             code, body, ctype = 400, _err(str(e)), JSON_CT
         except UnknownDataset as e:
@@ -531,17 +550,20 @@ class _Handler(http.server.BaseHTTPRequestHandler):
             traceback.print_exc(file=sys.stderr)
             code, body, ctype = 500, _err(
                 f"internal error: {type(e).__name__}: {e}"), JSON_CT
-        self._send(code, body, ctype)
+        self._send(code, body, ctype, headers)
         srv.obs.inc("repro_http_requests_total", method=method,
                     route=route, code=str(code))
         srv.obs.observe("repro_http_request_seconds",
                         time.perf_counter() - t0, route=route)
 
-    def _send(self, code: int, body: bytes, ctype: str) -> None:
+    def _send(self, code: int, body: bytes, ctype: str,
+              headers: Optional[dict] = None) -> None:
         try:
             self.send_response(code)
             self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
         except (BrokenPipeError, ConnectionResetError):

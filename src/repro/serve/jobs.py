@@ -15,6 +15,13 @@ Two invariants the service needs from its executor:
 Job lifecycle: ``queued → running → done | failed``.  Jobs are held in
 memory (the durable outputs — store, history, reports, alerts — live on
 disk); a restarted daemon starts with an empty job log.
+
+Backpressure: the queue is bounded.  ``max_queued`` caps the number of
+not-yet-running jobs; a submit beyond the cap raises ``QueueFull`` whose
+``retry_after`` estimates when a slot frees up (observed mean job
+duration × queue depth ÷ workers).  The daemon maps it to HTTP 429 with
+a ``Retry-After`` header — without the cap a tenant uploading faster
+than assessments complete grows the job log without limit.
 """
 from __future__ import annotations
 
@@ -28,6 +35,15 @@ from typing import Callable, Optional
 
 QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
 _SENTINEL = object()
+
+
+class QueueFull(RuntimeError):
+    """Submit rejected: ``max_queued`` jobs are already waiting.
+    ``retry_after`` (seconds, >= 1) estimates when a slot frees up."""
+
+    def __init__(self, message: str, retry_after: float):
+        super().__init__(message)
+        self.retry_after = retry_after
 
 
 @dataclasses.dataclass
@@ -65,10 +81,15 @@ class Job:
 class JobQueue:
     """FIFO job queue over a fixed worker pool, serialized per dataset."""
 
-    def __init__(self, workers: int = 2, fn: Callable[[Job], None] = None):
+    def __init__(self, workers: int = 2, fn: Callable[[Job], None] = None,
+                 max_queued: int = 0):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if max_queued < 0:
+            raise ValueError(f"max_queued must be >= 0, got {max_queued}")
         self._fn = fn
+        self._workers = workers
+        self._max_queued = max_queued      # 0 = unbounded
         self._lock = threading.Lock()
         self._jobs: dict[int, Job] = {}
         self._order: list[int] = []
@@ -90,13 +111,22 @@ class JobQueue:
                fn: Callable[[Job], None] = None) -> Job:
         """Enqueue one assessment of ``dataset``; returns the live Job.
         ``fn`` overrides the queue-level job body (must be provided in
-        one place or the other)."""
+        one place or the other).  Raises ``QueueFull`` when ``max_queued``
+        jobs are already waiting to run."""
         body = fn or self._fn
         if body is None:
             raise ValueError("no job body: pass fn= here or to JobQueue()")
         with self._lock:
             if self._closed:
                 raise RuntimeError("job queue is shut down")
+            if self._max_queued:
+                waiting = sum(1 for j in self._jobs.values()
+                              if j.state == QUEUED)
+                if waiting >= self._max_queued:
+                    raise QueueFull(
+                        f"job queue full: {waiting} jobs waiting "
+                        f"(max_queued={self._max_queued})",
+                        self._retry_after_locked(waiting))
             job = Job(id=next(self._ids), dataset=dataset, trigger=trigger,
                       path=path, enqueued_at=time.time())
             job._fn = body
@@ -106,6 +136,19 @@ class JobQueue:
                                      ).append(job)
             self._dispatch_locked(dataset)
         return job
+
+    def _retry_after_locked(self, waiting: int) -> float:
+        """Seconds until a queue slot plausibly frees: observed mean job
+        duration × (waiting depth ÷ workers), floored at 1s.  With no
+        finished jobs yet there is no duration signal — 1s tells the
+        client 'soon' without inventing precision."""
+        durs = [j.finished_at - j.started_at for j in self._jobs.values()
+                if j.state in (DONE, FAILED) and j.started_at is not None
+                and j.finished_at is not None]
+        if not durs:
+            return 1.0
+        mean = sum(durs) / len(durs)
+        return max(1.0, mean * max(1.0, waiting / self._workers))
 
     def _dispatch_locked(self, dataset: str) -> None:
         """Move the dataset's next pending job to the ready queue iff no

@@ -37,6 +37,16 @@ encode bit-for-bit).
 Rescans run through the ordinary ``dist.ChunkScheduler`` (any backend,
 retries, optional ``prefetch`` pipelining); its ``on_chunk`` hook freezes
 each newly evaluated segment's state into the store as it merges.
+
+Mesh scale-out: segments are *independent* (each frozen state is a pure
+function of its own bytes), so when the evaluator carries a device mesh
+the rescan set is embarrassingly parallel — rescanned segments are
+evaluated in shard-count-sized batches through
+``QualityEvaluator.eval_segment_batch`` (one whole segment per device
+slot, per-segment results kept unreduced so each state can still be
+frozen and content-addressed exactly as in the sequential path).  The
+batched executor replaces the chunk scheduler for those rescans, so
+``prefetch``/``speculate`` do not apply under a mesh.
 """
 from __future__ import annotations
 
@@ -47,7 +57,7 @@ from typing import Iterable, Optional, Sequence
 import numpy as np
 
 from ..core.evaluator import AssessmentResult, QualityEvaluator
-from ..dist import ChunkScheduler
+from ..dist import ChunkScheduler, ChunkStats
 from ..rdf import TermDictionary
 from ..rdf import ingest as rdf_ingest
 from ..rdf.triple_tensor import (COL_O, COL_P, COL_S,
@@ -235,10 +245,45 @@ def assess_incremental(evaluator: QualityEvaluator,
         ev.merge_chunk(state, ("rescanned", cid), counts, regs)
         rescanned[0] += 1
 
-    sched = ChunkScheduler(ev, prefetch=prefetch,
-                           straggler_factor=straggler_factor,
-                           speculate=speculate, on_chunk=on_chunk)
-    _, stats = sched.run(produce())
+    if ev.mesh is not None:
+        # Embarrassingly parallel rescan: one whole segment per device
+        # slot, batched through eval_segment_batch — per-segment results
+        # come back unreduced so on_chunk freezes each state exactly as
+        # the sequential scheduler path would.  prefetch/speculate are
+        # scheduler features and do not apply here.
+        if prefetch or speculate:
+            import warnings
+            warnings.warn(
+                "prefetch/speculate are ignored for mesh rescans: the "
+                "batched segment executor replaces the chunk scheduler",
+                RuntimeWarning, stacklevel=2)
+        stats = ChunkStats(chunks_total=0, mode="incremental+mesh",
+                           passes_per_chunk=ev.passes_per_chunk,
+                           devices=ev._shard_count())
+        batch: list = []            # [(cid, padded tensor)]
+
+        def flush() -> None:
+            if not batch:
+                return
+            t_eval = time.perf_counter()
+            outs = ev.eval_segment_batch([tt for _, tt in batch])
+            stats.chunk_eval_seconds.append(time.perf_counter() - t_eval)
+            stats.attempts += len(batch)
+            for (cid, _), (counts, regs) in zip(batch, outs):
+                on_chunk(cid, counts, regs)
+            batch.clear()
+
+        for cid, tt in enumerate(produce()):
+            batch.append((cid, tt))
+            if len(batch) >= ev._shard_count():
+                flush()
+        flush()
+    else:
+        sched = ChunkScheduler(ev, prefetch=prefetch,
+                               straggler_factor=straggler_factor,
+                               speculate=speculate, on_chunk=on_chunk)
+        _, stats = sched.run(produce())
+        stats.mode = "incremental" + ("+pipelined" if prefetch else "")
 
     for i, st in enumerate(reused):
         ev.merge_chunk(state, ("reused", i), st.counts, st.regs)
@@ -252,7 +297,6 @@ def assess_incremental(evaluator: QualityEvaluator,
     stats.segments_rescanned = rescanned[0]
     stats.bytes_total = nbytes["total"]
     stats.bytes_rescanned = nbytes["rescanned"]
-    stats.mode = "incremental" + ("+pipelined" if prefetch else "")
     stats.wall_seconds = time.perf_counter() - t0
     result.exec_stats = stats
 

@@ -512,3 +512,30 @@ def test_evaluator_shim_matches_pipeline(tensor):
     legacy = QualityEvaluator(PAPER_METRICS, fused=True).assess(tensor)
     new = qa.pipeline().metrics("paper").run(tensor)
     assert legacy.values == new.values
+
+
+# --- engine cache: mesh identity is structural, not object -------------------
+
+def test_evaluator_cache_hits_across_rebuilt_meshes(tensor):
+    """A service or benchmark building a fresh (but structurally equal)
+    mesh per call must NOT recompile the engine: the evaluator cache keys
+    on (axis names, device grid shape, device ids), not the Mesh object."""
+    import jax
+    from repro.qa.pipeline import _evaluator_for
+
+    _evaluator_for.cache_clear()
+    mesh_a = jax.make_mesh((1,), ("data",))
+    mesh_b = jax.make_mesh((1,), ("data",))
+    ev_a = qa.pipeline().metrics("paper").shard(mesh_a).evaluator()
+    ev_b = qa.pipeline().metrics("paper").shard(mesh_b).evaluator()
+    assert ev_a is ev_b, "rebuilt mesh must hit the engine cache"
+    info = _evaluator_for.cache_info()
+    assert info.misses == 1 and info.hits >= 1
+    # a structurally DIFFERENT mesh is a different engine
+    mesh_c = jax.make_mesh((1,), ("rows",))
+    ev_c = qa.pipeline().metrics("paper").shard(mesh_c).evaluator()
+    assert ev_c is not ev_a
+    # and the sharded engine still agrees with the local one
+    res = ev_a.assess(tensor)
+    ref = qa.pipeline().metrics("paper").run(tensor)
+    assert res.values == ref.values

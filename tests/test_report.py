@@ -215,6 +215,12 @@ def test_to_dqv_execution_provenance(result, tmp_path):
     assert es["mode"] == "incremental"
     assert all(isinstance(v, (int, str)) for v in es.values())
     json.loads(report.to_json(warm, computed_on=TS))  # serializable
+    # single-device runs carry no devices key; mesh runs surface the
+    # shard count in the provenance
+    assert "devices" not in es
+    warm.exec_stats.devices = 8
+    assert report.to_dqv(warm, computed_on=TS)["execStats"]["devices"] == 8
+    warm.exec_stats.devices = 1
     # NT form unchanged: exactly the 6 measurement triples per metric
     from repro.rdf.parser import parse_ntriples
     nt = report.to_ntriples(warm, computed_on=TS)

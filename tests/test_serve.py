@@ -382,3 +382,59 @@ def test_registry_survives_daemon_restart(server, tmp_path):
         assert job2["exec_stats"]["segments_rescanned"] == 0
     finally:
         srv2.close()
+
+
+# -- backpressure: bounded job queue -> 429 + Retry-After ----------------------
+
+def test_queue_full_returns_429_with_retry_after(tmp_path):
+    """Once max_queued jobs are waiting, job-enqueuing endpoints answer
+    429 with a Retry-After header, count the rejection in
+    repro_jobs_rejected_total, and recover after the queue drains."""
+    srv = QAServer(ServerConfig(
+        store_root=os.fspath(tmp_path / "root"), metrics="paper",
+        base=BASE, workers=1, segment_bytes=SEG, watch=False,
+        max_queued=1), port=0).start()
+    release = threading.Event()
+    started = threading.Event()
+
+    def blocking(job):
+        started.set()
+        assert release.wait(60)
+    srv._execute = blocking           # job body: park the only worker
+    try:
+        data = bsbm_ntriples(5, seed=1).encode()
+        st, _ = req(srv, "PUT", "/datasets/bp/data", body=data)
+        assert st == 202
+        assert started.wait(30)       # worker occupied
+        st, _ = req(srv, "PUT", "/datasets/bp/data", body=data)
+        assert st == 202              # 1 waiting == max_queued
+
+        r = urllib.request.Request(
+            f"http://127.0.0.1:{srv.port}/datasets/bp/data", data=data,
+            method="PUT")
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(r, timeout=30)
+        assert exc.value.code == 429
+        retry_after = exc.value.headers.get("Retry-After")
+        assert retry_after is not None and int(retry_after) >= 1
+        body = json.loads(exc.value.read())
+        assert "queue full" in body["error"]
+
+        st, text = req(srv, "GET", "/metrics")
+        assert ('repro_jobs_rejected_total{dataset="bp"} 1'
+                in text.decode())
+
+        # POST /assess hits the same bound
+        st, doc = req(srv, "POST", "/datasets/bp/assess")
+        assert st == 429, doc
+
+        release.set()                 # drain; submissions work again
+        deadline = time.time() + 30
+        while srv.jobs.counts()["queued"] + srv.jobs.counts()["running"]:
+            assert time.time() < deadline
+            time.sleep(0.05)
+        st, _ = req(srv, "PUT", "/datasets/bp/data", body=data)
+        assert st == 202
+    finally:
+        release.set()
+        srv.close()
