@@ -35,6 +35,13 @@ rm -f /tmp/check_store.nt
 echo "== daemon smoke: serve -> upload -> job -> report -> metrics =="
 python scripts/serve_smoke.py
 
+echo "== daemon chaos smoke: crash mid-queue -> replay, zero lost jobs =="
+# Injected kill -9 right after the second job-start journal append; the
+# restarted daemon must replay every accepted job (one via transient
+# retry), count the dead webhook, reclaim a DELETEd dataset, and exit 0
+# on SIGTERM.
+python scripts/serve_smoke.py --chaos
+
 echo "== mutation-reuse smoke gate =="
 # Content-hash sketches make mutation/delete reuse edit-local; this gate
 # fails if a 1% in-place mutation ever regresses to rescanning >10% of

@@ -14,10 +14,16 @@ into a triplestore, a dashboard, plain curl)::
 
 ``python -m repro.launch.assess --serve PORT --store-root DIR`` forwards
 here, so either entry point works.
+
+Shutdown is graceful on SIGTERM and SIGINT (container orchestrators get
+clean rollouts): the HTTP listener stops accepting, running jobs drain,
+the job journal is flushed, and the process exits 0.  Jobs still queued
+at that point stay in the journal and replay on the next start.
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import sys
 
 
@@ -49,6 +55,30 @@ def main(argv=None):
     ap.add_argument("--max-queued", type=int, default=64,
                     help="waiting-job cap: further submissions get HTTP "
                          "429 + Retry-After (0 = unbounded)")
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="attempts per job: transient failures retry "
+                         "with exponential backoff (1 = never retry)")
+    ap.add_argument("--retry-base", type=float, default=0.5,
+                    metavar="SECONDS",
+                    help="retry backoff base (doubles per attempt, "
+                         "jittered)")
+    ap.add_argument("--job-timeout", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="per-attempt watchdog: a hung assessment is "
+                         "expired and its worker freed (0 = off)")
+    ap.add_argument("--breaker-threshold", type=int, default=5,
+                    help="consecutive terminal failures that quarantine "
+                         "a dataset (submits -> 503 + Retry-After until "
+                         "a cool-down probe succeeds; 0 = off)")
+    ap.add_argument("--breaker-cooldown", type=float, default=30.0,
+                    metavar="SECONDS",
+                    help="quarantine cool-down (doubles per re-trip)")
+    ap.add_argument("--max-finished", type=int, default=512,
+                    help="finished jobs retained in memory; older ones "
+                         "are evicted (the journal stays durable)")
+    ap.add_argument("--no-journal", action="store_true",
+                    help="disable the write-ahead job journal (accepted "
+                         "jobs will NOT survive a crash)")
     ap.add_argument("--poll-interval", type=float, default=2.0,
                     metavar="SECONDS",
                     help="watcher cadence for registered source paths")
@@ -65,7 +95,12 @@ def main(argv=None):
         workers=args.workers, prefetch=args.prefetch,
         speculate=args.speculate, segment_bytes=args.segment_bytes,
         poll_interval=args.poll_interval, watch=not args.no_watch,
-        max_queued=args.max_queued)
+        max_queued=args.max_queued, journal=not args.no_journal,
+        max_attempts=args.max_attempts, retry_base=args.retry_base,
+        job_timeout=args.job_timeout,
+        breaker_threshold=args.breaker_threshold,
+        breaker_cooldown=args.breaker_cooldown,
+        max_finished=args.max_finished)
     srv = QAServer(cfg, host=args.host, port=args.port).start()
     print(f"# repro.serve on http://{srv.host}:{srv.port} "
           f"(store root: {srv.registry.root}, {args.workers} workers, "
@@ -78,13 +113,27 @@ def main(argv=None):
           "(?format=nt for N-Triples)", file=sys.stderr)
     print("#   GET  /datasets/<name>/history trend report | /metrics | "
           "/healthz", file=sys.stderr)
+    # graceful shutdown: the handler only unblocks wait() (signal-safe);
+    # the main thread then drains jobs and flushes the journal in close()
+    got = []
+
+    def _on_signal(signum, frame):
+        got.append(signal.Signals(signum).name)
+        srv.request_stop()
+
+    signal.signal(signal.SIGTERM, _on_signal)
+    signal.signal(signal.SIGINT, _on_signal)
     try:
         srv.wait()
-    except KeyboardInterrupt:
-        print("# shutting down", file=sys.stderr)
+    except KeyboardInterrupt:       # SIGINT before the handler was set
+        got.append("SIGINT")
     finally:
+        print(f"# repro.serve: {got[0] if got else 'stop'} — draining "
+              "running jobs, flushing journal", file=sys.stderr)
         srv.close()
+        print("# repro.serve: clean shutdown", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -7,6 +7,14 @@ assessments, serves DQV reports + quality-history trends, fires
 threshold/regression alerts, and exposes Prometheus metrics.  Stdlib
 HTTP only — no new dependencies.
 
+Crash-safe: accepted jobs are journaled write-ahead (``jobs.jsonl``) and
+replayed on restart, transient failures retry with backoff, hung jobs are
+expired by a watchdog, repeatedly-failing datasets are quarantined by a
+per-dataset circuit breaker (HTTP 503 + Retry-After), and
+``DELETE /datasets/<name>`` reclaims a tenant's store.
+``ServiceFaultInjector`` deterministically injects crashes / slow jobs /
+transient errors / failing webhooks for testing all of the above.
+
 Quickstart::
 
     from repro.serve import QAServer, ServerConfig
@@ -20,15 +28,19 @@ or from the CLI::
 """
 from .alerts import AlertRule, parse_rule, parse_rules, post_webhook
 from .daemon import ApiError, QAServer, ServerConfig
-from .jobs import Job, JobQueue, QueueFull
+from .faults import ServiceFaultInjector
+from .jobs import (DatasetQuarantined, Job, JobQueue, JobTimeout,
+                   QueueFull, TransientJobError)
+from .journal import JobJournal
 from .obs import Metrics
 from .registry import (Dataset, DatasetRegistry, RegistryError,
                        UnknownDataset, validate_name)
 
 __all__ = [
     "AlertRule", "parse_rule", "parse_rules", "post_webhook",
-    "ApiError", "QAServer", "ServerConfig",
+    "ApiError", "QAServer", "ServerConfig", "ServiceFaultInjector",
     "Job", "JobQueue", "QueueFull", "Metrics",
+    "DatasetQuarantined", "JobTimeout", "TransientJobError", "JobJournal",
     "Dataset", "DatasetRegistry", "RegistryError", "UnknownDataset",
     "validate_name",
 ]

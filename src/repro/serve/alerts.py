@@ -23,6 +23,7 @@ import json
 import operator
 import re
 import sys
+import time
 import urllib.request
 from typing import Mapping, Optional, Sequence
 
@@ -85,17 +86,36 @@ def parse_rules(rules: Sequence[str]) -> tuple[AlertRule, ...]:
     return tuple(parse_rule(r) for r in rules)
 
 
-def post_webhook(url: str, payload: dict, timeout: float = 5.0) -> bool:
-    """POST a fired-alert record as JSON; returns success.  Any failure
-    (unreachable target, non-2xx, timeout) is reported on stderr and
-    swallowed — the assessment result stands regardless."""
-    req = urllib.request.Request(
-        url, data=json.dumps(payload, sort_keys=True).encode(),
-        headers={"Content-Type": "application/json"}, method="POST")
-    try:
-        with urllib.request.urlopen(req, timeout=timeout) as resp:
-            return 200 <= resp.status < 300
-    except Exception as e:              # noqa: BLE001 — never fatal
-        print(f"# repro.serve: webhook POST to {url} failed: {e}",
-              file=sys.stderr)
-        return False
+def post_webhook(url: str, payload: dict, timeout: float = 5.0,
+                 retries: int = 3, backoff: float = 0.5,
+                 fault=None) -> bool:
+    """POST a fired-alert record as JSON; returns success.  Up to
+    ``retries`` attempts with exponential backoff between them
+    (``backoff × 2^(attempt-1)`` seconds) — a webhook receiver mid-deploy
+    gets the alert on the next try instead of losing it.  Any final
+    failure (unreachable target, non-2xx, timeout) is reported on stderr
+    and swallowed — the assessment result stands regardless; the daemon
+    counts it in ``repro_webhook_failures_total``.  ``fault`` is a
+    ``ServiceFaultInjector`` hook (``on_webhook`` may raise per attempt,
+    the test substrate for the retry path)."""
+    data = json.dumps(payload, sort_keys=True).encode()
+    last = "no attempts"
+    for attempt in range(1, max(1, retries) + 1):
+        try:
+            if fault is not None:
+                fault.on_webhook(url)
+            req = urllib.request.Request(
+                url, data=data,
+                headers={"Content-Type": "application/json"},
+                method="POST")
+            with urllib.request.urlopen(req, timeout=timeout) as resp:
+                if 200 <= resp.status < 300:
+                    return True
+                last = f"HTTP {resp.status}"
+        except Exception as e:          # noqa: BLE001 — never fatal
+            last = str(e)
+        if attempt < max(1, retries):
+            time.sleep(backoff * (2 ** (attempt - 1)))
+    print(f"# repro.serve: webhook POST to {url} failed after "
+          f"{max(1, retries)} attempts: {last}", file=sys.stderr)
+    return False

@@ -19,6 +19,9 @@ API (JSON unless noted)::
     PUT  /datasets/<name>/data         upload N-Triples bytes; auto-
                                        registers unknown names; enqueues
                                        an incremental assessment -> job
+    DELETE /datasets/<name>            unregister + reclaim the store
+                                       (409 while jobs are in flight;
+                                       tombstone journaled first)
     POST /datasets/<name>/assess       enqueue an assessment of the
                                        registered source (or last upload)
     GET  /datasets/<name>/jobs         job log, oldest first
@@ -40,6 +43,17 @@ Safety properties:
   429 with a ``Retry-After`` header once that many jobs are waiting, and
   each rejection is counted in ``repro_jobs_rejected_total`` — clients
   faster than the workers see backpressure, not unbounded memory growth;
+* accepted work is durable: every job is journaled (``jobs.jsonl`` under
+  the store root, fsync'd) *before* its 202 goes out, and a restarted
+  daemon replays unfinished jobs under their original ids — ``kill -9``
+  loses nothing a client was told was accepted;
+* failures degrade gracefully: transient job errors retry with
+  exponential backoff + jitter (``max_attempts``), a hung assessment is
+  expired by the per-job watchdog (``job_timeout``) so it cannot wedge a
+  worker, and ``breaker_threshold`` consecutive terminal failures
+  quarantine a dataset — submits answer 503 + Retry-After (the dataset
+  is poison) while healthy tenants keep running, until a cool-down probe
+  succeeds;
 * each dataset's store dir is an ordinary ``repro.store`` directory —
   external CLI monitors (``--store <root>/<name>/store``) may run
   concurrently with daemon jobs; commits are flock-serialized and the
@@ -61,7 +75,8 @@ from typing import Optional
 from urllib.parse import parse_qs, urlsplit
 
 from . import alerts as alerts_mod
-from .jobs import Job, JobQueue, QueueFull
+from .jobs import DatasetQuarantined, Job, JobQueue, QueueFull
+from .journal import JobJournal
 from .obs import Metrics
 from .registry import DatasetRegistry, RegistryError, UnknownDataset
 from ..launch.assess import file_signature
@@ -100,6 +115,19 @@ class ServerConfig:
     watch: bool = True                # poll registered source paths
     max_queued: int = 64              # waiting-job cap -> HTTP 429
                                       # (0 = unbounded, pre-cap behaviour)
+    journal: bool = True              # write-ahead job journal + replay
+    max_attempts: int = 3             # attempts per job (transient errors
+                                      #   retry with backoff; 1 = never)
+    retry_base: float = 0.5           # backoff base seconds (x2 per try)
+    job_timeout: float = 0.0          # per-attempt watchdog (0 = off)
+    breaker_threshold: int = 5        # consecutive terminal failures that
+                                      #   quarantine a dataset (0 = off)
+    breaker_cooldown: float = 30.0    # quarantine cool-down seconds
+                                      #   (doubles per re-trip, capped 32x)
+    max_finished: int = 512           # finished jobs retained in memory
+                                      #   (older evicted; journal durable)
+    webhook_retries: int = 3          # alert webhook POST attempts
+    webhook_backoff: float = 0.5      # webhook backoff base seconds
 
 
 def _now_iso() -> str:
@@ -118,13 +146,24 @@ class QAServer:
     """The daemon: HTTP server + registry + job queue + watcher."""
 
     def __init__(self, config: ServerConfig, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, faults=None):
         from .. import qa                     # defer jax-heavy import
         self.config = config
         self.registry = DatasetRegistry(config.store_root)
         self.obs = Metrics()
-        self.jobs = JobQueue(workers=config.workers,
-                             max_queued=config.max_queued)
+        self._faults = faults
+        self.journal = (JobJournal(
+            os.path.join(self.registry.root, "jobs.jsonl"), faults=faults)
+            if config.journal else None)
+        self.jobs = JobQueue(
+            workers=config.workers, max_queued=config.max_queued,
+            journal=self.journal, faults=faults, metrics=self.obs,
+            max_attempts=config.max_attempts,
+            retry_base=config.retry_base,
+            job_timeout=config.job_timeout,
+            breaker_threshold=config.breaker_threshold,
+            breaker_cooldown=config.breaker_cooldown,
+            max_finished=config.max_finished)
         pipe = (qa.pipeline().metrics(config.metrics)
                 .backend(config.backend))
         if config.prefetch:
@@ -144,6 +183,36 @@ class QAServer:
         self.obs.gauge("repro_job_queue_depth", self.jobs.depth)
         self.obs.gauge("repro_datasets_registered",
                        lambda: len(self.registry.names()))
+        self._closed = False
+        if self.journal is not None:
+            self._replay_journal()
+
+    def _replay_journal(self) -> None:
+        """Re-enqueue every journaled job that never reached a terminal
+        state — ``kill -9`` loses no accepted work.  The journal is first
+        compacted to exactly those jobs' enqueue records (atomic rewrite:
+        a crash mid-compaction leaves the old journal governing), then
+        each is re-submitted under its original id with the enqueue
+        append skipped (the compacted record already covers it)."""
+        unfinished, max_id = JobJournal.replay(self.journal.path)
+        self.jobs.set_next_id(max_id + 1)
+        keep = [rec for rec in unfinished
+                if rec["dataset"] in self.registry
+                and rec.get("path") and os.path.exists(rec["path"])]
+        self.journal.reset([
+            JobJournal.enqueue_record(rec["id"], rec["dataset"],
+                                      rec["trigger"], rec["path"],
+                                      requeued=True)
+            for rec in keep])
+        for rec in keep:
+            try:
+                self.jobs.submit(rec["dataset"], trigger=rec["trigger"],
+                                 path=rec["path"], fn=self._execute,
+                                 _id=rec["id"], _journal=False)
+            except (QueueFull, DatasetQuarantined):
+                continue      # enqueue record stays; next restart retries
+            self.obs.inc("repro_jobs_replayed_total",
+                         dataset=rec["dataset"])
 
     # -- lifecycle -------------------------------------------------------------
     def start(self) -> "QAServer":
@@ -159,14 +228,29 @@ class QAServer:
         return self
 
     def wait(self) -> None:
-        """Block until ``close()`` (or the process is interrupted)."""
+        """Block until ``close()``/``request_stop()`` (or the process is
+        interrupted)."""
         self._stop.wait()
 
+    def request_stop(self) -> None:
+        """Unblock ``wait()`` without tearing anything down yet — the
+        SIGTERM/SIGINT handler's half of a graceful shutdown (signal
+        handlers must not join threads; the main thread runs ``close``)."""
+        self._stop.set()
+
     def close(self) -> None:
+        """Graceful shutdown: stop accepting HTTP, drain running jobs,
+        flush the journal.  Jobs still queued (or awaiting a retry) stay
+        in the journal and replay on the next start.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
         self.httpd.shutdown()
         self.httpd.server_close()
         self.jobs.shutdown(wait=True)
+        if self.journal is not None:
+            self.journal.close()
         for t in self._threads:
             t.join(timeout=10.0)
 
@@ -224,6 +308,14 @@ class QAServer:
             retry = max(1, int(round(e.retry_after)))
             raise ApiError(429, f"{e} — retry in ~{retry}s",
                            headers={"Retry-After": str(retry)}) from None
+        except DatasetQuarantined as e:
+            # 503, not 429: the *dataset* is poisoned (circuit breaker
+            # open after consecutive failures), the service is healthy —
+            # other tenants keep running
+            self.obs.inc("repro_jobs_quarantined_total", dataset=name)
+            retry = max(1, int(round(e.retry_after)))
+            raise ApiError(503, str(e),
+                           headers={"Retry-After": str(retry)}) from None
 
     def _execute(self, job: Job) -> None:
         """Job body (runs on a worker thread): one incremental assessment
@@ -231,6 +323,8 @@ class QAServer:
         alert evaluation, and counter updates."""
         name = job.dataset
         reg = self.registry
+        reg.get(name)       # deleted mid-flight -> fail (permanent), and
+        #                     never recreate a tombstoned store dir
         uri = f"urn:repro:dataset:{name}"
         try:
             pipe = self._pipe.incremental(
@@ -294,8 +388,14 @@ class QAServer:
             job.alerts_fired += 1
             self.obs.inc("repro_alerts_fired_total", dataset=job.dataset)
             if ds.webhook:
-                if not alerts_mod.post_webhook(ds.webhook, rec):
-                    self.obs.inc("repro_webhook_errors_total",
+                if not alerts_mod.post_webhook(
+                        ds.webhook, rec,
+                        retries=self.config.webhook_retries,
+                        backoff=self.config.webhook_backoff,
+                        fault=self._faults):
+                    # final failure after bounded retries — the alert
+                    # record is on disk regardless (alerts.jsonl)
+                    self.obs.inc("repro_webhook_failures_total",
                                  dataset=job.dataset)
 
     # -- read-model helpers ----------------------------------------------------
@@ -309,6 +409,7 @@ class QAServer:
             "by_state": {st: sum(1 for j in jobs if j["state"] == st)
                          for st in ("queued", "running", "done", "failed")},
         }
+        info["breaker"] = self.jobs.breaker_state(name)
         info["has_report"] = os.path.exists(
             self.registry.report_path(name, "json"))
         info["snapshots"] = len(report.load_history(
@@ -407,6 +508,27 @@ def _h_dataset_info(srv, handler, m, q):
     return 200, _json_bytes(srv.dataset_info(m.group(1))), JSON_CT
 
 
+def _h_delete(srv, handler, m, q):
+    """Dataset lifecycle GC: unregister + reclaim the store.  Refused
+    (409) while any job for the dataset is queued, running, or awaiting
+    retry — drain first, then DELETE.  The tombstone is journaled before
+    removal so a crash mid-delete never replays the dataset's jobs."""
+    name = m.group(1)
+    srv.registry.get(name)                  # 404 on unknown dataset
+    if srv.jobs.has_unfinished(name):
+        raise ApiError(409, f"dataset {name!r} has queued or running "
+                            "jobs; wait for them to finish and retry",
+                       headers={"Retry-After": "2"})
+    if srv.journal is not None:
+        srv.journal.append("tombstone", dataset=name)
+    freed = srv.registry.delete(name)
+    srv._watch_sigs.pop(name, None)
+    srv.jobs.forget_dataset(name)
+    srv.obs.inc("repro_datasets_deleted_total")
+    return 200, _json_bytes({"deleted": name,
+                             "bytes_reclaimed": freed}), JSON_CT
+
+
 def _h_upload(srv, handler, m, q):
     name = m.group(1)
     data = _read_body(handler)
@@ -485,6 +607,8 @@ _ROUTES = [
      _h_register),
     ("GET", "dataset", re.compile(rf"^/datasets/{_NAME_PAT}$"),
      _h_dataset_info),
+    ("DELETE", "delete", re.compile(rf"^/datasets/{_NAME_PAT}$"),
+     _h_delete),
     ("PUT", "data", re.compile(rf"^/datasets/{_NAME_PAT}/data$"),
      _h_upload),
     ("POST", "assess", re.compile(rf"^/datasets/{_NAME_PAT}/assess$"),
@@ -517,6 +641,9 @@ class _Handler(http.server.BaseHTTPRequestHandler):
 
     def do_POST(self):
         self._route("POST")
+
+    def do_DELETE(self):
+        self._route("DELETE")
 
     def _route(self, method: str) -> None:
         srv: QAServer = self.server.qa

@@ -31,6 +31,7 @@ import datetime
 import json
 import os
 import re
+import shutil
 import threading
 from typing import Optional, Sequence
 
@@ -151,6 +152,32 @@ class DatasetRegistry:
                            indent=2).encode())
             self._datasets[name] = ds
             return ds, old is None
+
+    def delete(self, name: str) -> int:
+        """Unregister ``name`` and reclaim its entire on-disk footprint
+        (store segments via ``SegmentStore.destroy`` — which serializes
+        with any concurrent committer on the store's flock — plus the
+        registration record, payload, reports, and alert log).  Returns
+        bytes freed.  The *caller* is responsible for quiescence (the
+        daemon refuses the DELETE while jobs are queued or running) and
+        for journaling the tombstone."""
+        from ..store.store import SegmentStore
+        validate_name(name)
+        with self._lock:
+            if name not in self._datasets:
+                raise UnknownDataset(f"dataset {name!r} is not registered"
+                                     ) from None
+            del self._datasets[name]
+        d = self.dataset_dir(name)
+        freed = SegmentStore.destroy(self.store_dir(name))
+        for base, _dirs, files in os.walk(d):
+            for fn in files:
+                try:
+                    freed += os.path.getsize(os.path.join(base, fn))
+                except OSError:
+                    pass
+        shutil.rmtree(d, ignore_errors=True)
+        return freed
 
     def get(self, name: str) -> Dataset:
         with self._lock:

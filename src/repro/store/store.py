@@ -278,6 +278,58 @@ class SegmentStore:
             self._pending = {}
             self._gc(set(self._digests))
 
+    @classmethod
+    def destroy(cls, directory) -> int:
+        """Reclaim an entire store directory (dataset lifecycle GC —
+        ``DELETE /datasets/<name>`` in ``repro.serve``); returns bytes
+        freed.  Acquires the store's commit flock first, so a concurrent
+        runner's in-flight commit completes before files vanish; a racing
+        runner that starts *after* the removal simply rebuilds cold (the
+        store self-heals from an empty directory).  Safe on a path that
+        never held a store (returns 0)."""
+        directory = os.path.abspath(os.fspath(directory))
+        if not os.path.isdir(directory):
+            return 0
+        freed = 0
+        lock_path = os.path.join(directory, ".lock")
+        lock_fd = None
+        if fcntl is not None:
+            try:
+                lock_fd = os.open(lock_path,
+                                  os.O_CREAT | os.O_RDWR, 0o644)
+                fcntl.flock(lock_fd, fcntl.LOCK_EX)
+            except OSError:
+                lock_fd = None
+        try:
+            for base, _dirs, files in os.walk(directory, topdown=False):
+                for fn in files:
+                    path = os.path.join(base, fn)
+                    if path == lock_path:
+                        continue
+                    try:
+                        freed += os.path.getsize(path)
+                        os.remove(path)
+                    except OSError:
+                        pass
+                if base != directory:
+                    try:
+                        os.rmdir(base)
+                    except OSError:
+                        pass
+        finally:
+            if lock_fd is not None:
+                fcntl.flock(lock_fd, fcntl.LOCK_UN)
+                os.close(lock_fd)
+        for leftover in (lock_path, directory):
+            try:
+                if leftover == directory:
+                    os.rmdir(leftover)
+                else:
+                    os.remove(leftover)
+            except OSError:
+                pass
+        return freed
+
     def _gc(self, live: set) -> None:
         """Remove state files not referenced by the manifest just written
         — except *fresh* ones (younger than ``GC_GRACE_SECONDS``), which

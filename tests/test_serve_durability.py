@@ -1,0 +1,537 @@
+"""Crash-safety and graceful-degradation of ``repro.serve``: the
+write-ahead job journal (replay after ``kill -9`` with bit-identical
+results), retry/backoff on transient failures, the per-job watchdog,
+per-dataset circuit breakers (503 quarantine vs 429 backpressure),
+``DELETE /datasets/<name>`` lifecycle GC, finished-job retention, and
+bounded webhook retries — all driven by ``ServiceFaultInjector``."""
+import http.server
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import qa
+from repro.rdf import bsbm_ntriples
+from repro.serve import (DatasetQuarantined, JobJournal, JobQueue,
+                         QAServer, ServerConfig, ServiceFaultInjector,
+                         TransientJobError, post_webhook)
+
+BASE = ("http://bsbm.example.org/",)
+SEG = 4096
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def req(port, method, path, body=None):
+    """(status, parsed-or-raw body); 4xx/5xx don't raise."""
+    r = urllib.request.Request(
+        f"http://127.0.0.1:{port}{path}", data=body, method=method)
+    try:
+        with urllib.request.urlopen(r, timeout=30) as resp:
+            raw, status = resp.read(), resp.status
+            ctype = resp.headers.get("Content-Type", "")
+            headers = dict(resp.headers)
+    except urllib.error.HTTPError as e:
+        raw, status = e.read(), e.code
+        ctype = e.headers.get("Content-Type", "")
+        headers = dict(e.headers)
+    if ctype.startswith("application/json"):
+        return status, json.loads(raw), headers
+    return status, raw, headers
+
+
+def wait_job(port, name, job_id, timeout=120.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        st, job, _ = req(port, "GET", f"/datasets/{name}/jobs/{job_id}")
+        assert st == 200, job
+        if job["state"] in ("done", "failed"):
+            return job
+        time.sleep(0.02)
+    raise AssertionError(f"job {job_id} still {job['state']}")
+
+
+def upload(port, name, text):
+    st, doc, _ = req(port, "PUT", f"/datasets/{name}/data",
+                     body=text.encode())
+    assert st == 202, doc
+    return doc["job"]["id"]
+
+
+def make_server(tmp_path, faults=None, **cfg):
+    defaults = dict(store_root=os.fspath(tmp_path / "root"),
+                    metrics="paper", base=BASE, workers=2,
+                    segment_bytes=SEG, watch=False, retry_base=0.05)
+    defaults.update(cfg)
+    return QAServer(ServerConfig(**defaults), port=0,
+                    faults=faults).start()
+
+
+# -- journal unit behaviour ----------------------------------------------------
+
+def test_journal_replay_torn_tail_and_tombstone(tmp_path):
+    path = os.fspath(tmp_path / "jobs.jsonl")
+    j = JobJournal(path)
+    j.append("enqueue", job=1, dataset="a", trigger="upload", path="/p1")
+    j.append("enqueue", job=2, dataset="a", trigger="manual", path="/p2")
+    j.append("enqueue", job=3, dataset="b", trigger="watch", path="/p3")
+    j.append("start", job=1, attempt=1)
+    j.append("finish", job=1, state="done", error=None)
+    j.append("start", job=2, attempt=1)
+    j.append("retry", job=2, attempt=1, error="x", next_at=0.0)
+    j.close()
+    # torn tail of a crashed append: must be skipped, not fatal
+    with open(path, "a") as f:
+        f.write('{"ev": "fin')
+    unfinished, max_id = JobJournal.replay(path)
+    assert max_id == 3
+    assert [(r["id"], r["dataset"], r["trigger"], r["path"])
+            for r in unfinished] == [(2, "a", "manual", "/p2"),
+                                     (3, "b", "watch", "/p3")]
+    # a tombstone voids the dataset's unfinished jobs up to that point
+    j2 = JobJournal(path)
+    j2.append("tombstone", dataset="a")
+    j2.close()
+    unfinished, max_id = JobJournal.replay(path)
+    assert [r["id"] for r in unfinished] == [3] and max_id == 3
+    # compaction: reset() atomically replaces the contents
+    j3 = JobJournal(path)
+    j3.reset([JobJournal.enqueue_record(3, "b", "watch", "/p3",
+                                        requeued=True)])
+    j3.close()
+    recs = JobJournal.load(path)
+    assert len(recs) == 1 and recs[0]["job"] == 3 and recs[0]["requeued"]
+
+
+def test_journal_write_through_and_compaction_on_restart(tmp_path):
+    """Every accepted job hits the journal before submit returns; a
+    restarted daemon compacts the journal down to the replayed jobs."""
+    srv = make_server(tmp_path)
+    try:
+        data = bsbm_ntriples(30, seed=1)
+        jid = upload(srv.port, "wj", data)
+        recs = JobJournal.load(srv.journal.path)
+        assert any(r["ev"] == "enqueue" and r["job"] == jid for r in recs)
+        assert wait_job(srv.port, "wj", jid)["state"] == "done"
+        recs = JobJournal.load(srv.journal.path)
+        assert any(r["ev"] == "finish" and r["job"] == jid
+                   and r["state"] == "done" for r in recs)
+        root = srv.registry.root
+    finally:
+        srv.close()
+    srv2 = QAServer(ServerConfig(store_root=root, metrics="paper",
+                                 base=BASE, segment_bytes=SEG,
+                                 watch=False), port=0).start()
+    try:
+        # nothing unfinished -> compacted to empty; ids keep counting up
+        assert JobJournal.load(srv2.journal.path) == []
+        jid2 = upload(srv2.port, "wj", data)
+        assert jid2 > jid
+    finally:
+        srv2.close()
+
+
+# -- retry / backoff / attempt surfacing ---------------------------------------
+
+def test_transient_failure_retries_to_success(tmp_path):
+    faults = ServiceFaultInjector(fail_jobs={"r1": 2})
+    srv = make_server(tmp_path, faults=faults, max_attempts=4)
+    try:
+        data = bsbm_ntriples(40, seed=2)
+        job = wait_job(srv.port, "r1", upload(srv.port, "r1", data))
+        assert job["state"] == "done", job["error"]
+        assert job["attempts"] == 3            # 2 injected failures + 1
+        assert job["max_attempts"] == 4
+        # values still exactly the cold run's despite the retries
+        cold = qa.assess(data, metrics="paper", base=BASE)
+        assert job["values"] == {k: float(v)
+                                 for k, v in sorted(cold.values.items())}
+        st, prom, _ = req(srv.port, "GET", "/metrics")
+        assert 'repro_job_retries_total{dataset="r1"} 2' in prom.decode()
+    finally:
+        srv.close()
+
+
+def test_permanent_failure_never_retries(tmp_path):
+    faults = ServiceFaultInjector(permanent_fail={"p1"})
+    srv = make_server(tmp_path, faults=faults, max_attempts=4,
+                      breaker_threshold=0)
+    try:
+        job = wait_job(srv.port, "p1",
+                       upload(srv.port, "p1", bsbm_ntriples(20, seed=3)))
+        assert job["state"] == "failed"
+        assert job["attempts"] == 1            # permanent: no retries
+        assert "injected permanent failure" in job["error"]
+    finally:
+        srv.close()
+
+
+def test_watchdog_expires_hung_job_and_frees_worker(tmp_path):
+    faults = ServiceFaultInjector(slow_jobs={"hung": 10.0})
+    srv = make_server(tmp_path, faults=faults, workers=1,
+                      max_attempts=1, job_timeout=0.4)
+    try:
+        t0 = time.time()
+        job = wait_job(srv.port, "hung",
+                       upload(srv.port, "hung", bsbm_ntriples(20, seed=4)))
+        assert job["state"] == "failed"
+        assert "watchdog" in job["error"]
+        assert time.time() - t0 < 8.0          # expired, not slept out
+        # the single worker is free again: a healthy dataset completes
+        # while the abandoned thread is still sleeping
+        ok = wait_job(srv.port, "ok",
+                      upload(srv.port, "ok", bsbm_ntriples(20, seed=5)))
+        assert ok["state"] == "done", ok["error"]
+        st, prom, _ = req(srv.port, "GET", "/metrics")
+        assert 'repro_job_timeouts_total{dataset="hung"} 1' \
+            in prom.decode()
+    finally:
+        srv.close()
+
+
+# -- circuit breaker -----------------------------------------------------------
+
+def test_breaker_quarantines_poison_dataset_then_probes(tmp_path):
+    faults = ServiceFaultInjector(permanent_fail={"bad"})
+    srv = make_server(tmp_path, faults=faults, max_attempts=1,
+                      breaker_threshold=2, breaker_cooldown=1.0)
+    try:
+        data = bsbm_ntriples(30, seed=6)
+        for _ in range(2):
+            job = wait_job(srv.port, "bad", upload(srv.port, "bad", data))
+            assert job["state"] == "failed"
+        # breaker open: submits answer 503 + Retry-After (not 429)
+        st, doc, headers = req(srv.port, "POST", "/datasets/bad/assess")
+        assert st == 503 and "quarantined" in doc["error"]
+        assert int(headers["Retry-After"]) >= 1
+        st, info, _ = req(srv.port, "GET", "/datasets/bad")
+        assert info["breaker"]["state"] == "open"
+        # ...while a healthy tenant keeps running
+        ok = wait_job(srv.port, "good",
+                      upload(srv.port, "good", bsbm_ntriples(30, seed=7)))
+        assert ok["state"] == "done", ok["error"]
+        st, prom, _ = req(srv.port, "GET", "/metrics")
+        text = prom.decode()
+        assert 'repro_breaker_open_total{dataset="bad"} 1' in text
+        assert 'repro_jobs_quarantined_total{dataset="bad"} 1' in text
+
+        # the poison payload gets fixed; after the cool-down one probe
+        # is admitted, succeeds, and closes the breaker
+        faults.permanent_fail.clear()
+        time.sleep(1.1)
+        st, doc, _ = req(srv.port, "POST", "/datasets/bad/assess")
+        assert st == 202, doc
+        probe = wait_job(srv.port, "bad", doc["job"]["id"])
+        assert probe["state"] == "done", probe["error"]
+        st, info, _ = req(srv.port, "GET", "/datasets/bad")
+        assert info["breaker"]["state"] == "closed"
+        st, doc, _ = req(srv.port, "POST", "/datasets/bad/assess")
+        assert st == 202                      # fully back in service
+        wait_job(srv.port, "bad", doc["job"]["id"])
+    finally:
+        srv.close()
+
+
+def test_breaker_reopens_on_failed_probe():
+    """Queue-level: a probe that fails re-opens the breaker with a
+    doubled cool-down; only one probe is admitted per cool-down."""
+    boom = RuntimeError("still broken")
+
+    def body(job):
+        raise boom
+    q = JobQueue(workers=1, fn=body, breaker_threshold=1,
+                 breaker_cooldown=0.2)
+    try:
+        j = q.submit("ds")
+        deadline = time.time() + 10
+        while q.get(j.id)["state"] != "failed":
+            assert time.time() < deadline
+            time.sleep(0.01)
+        with pytest.raises(DatasetQuarantined):
+            q.submit("ds")
+        time.sleep(0.25)
+        probe = q.submit("ds")                 # half-open: probe admitted
+        with pytest.raises(DatasetQuarantined):
+            q.submit("ds")                     # but only one at a time
+        while q.get(probe.id)["state"] != "failed":
+            assert time.time() < deadline
+            time.sleep(0.01)
+        with pytest.raises(DatasetQuarantined) as exc:
+            q.submit("ds")                     # re-opened, cool-down x2
+        assert exc.value.retry_after > 0.2
+        assert q.breaker_state("ds")["trips"] == 2
+    finally:
+        q.shutdown()
+
+
+# -- DELETE lifecycle ----------------------------------------------------------
+
+def test_delete_dataset_reclaims_store_and_refuses_while_active(tmp_path):
+    faults = ServiceFaultInjector(slow_jobs={"d2": 1.5})
+    srv = make_server(tmp_path, faults=faults)
+    try:
+        data = bsbm_ntriples(60, seed=8)
+        job = wait_job(srv.port, "d1", upload(srv.port, "d1", data))
+        assert job["state"] == "done"
+        ddir = srv.registry.dataset_dir("d1")
+        assert os.path.isdir(os.path.join(ddir, "store", "segments"))
+
+        # refused while a job is in flight (409 + Retry-After)
+        jid2 = upload(srv.port, "d2", data)
+        st, doc, headers = req(srv.port, "DELETE", "/datasets/d2")
+        assert st == 409 and "jobs" in doc["error"]
+        assert headers.get("Retry-After")
+        wait_job(srv.port, "d2", jid2)
+
+        st, doc, _ = req(srv.port, "DELETE", "/datasets/d1")
+        assert st == 200 and doc["deleted"] == "d1"
+        assert doc["bytes_reclaimed"] > 0
+        assert not os.path.exists(ddir)        # segments + records gone
+        st, doc, _ = req(srv.port, "GET", "/datasets/d1")
+        assert st == 404
+        st, doc, _ = req(srv.port, "DELETE", "/datasets/d1")
+        assert st == 404                       # idempotent at the API
+        # the journal holds the tombstone
+        assert any(r["ev"] == "tombstone" and r["dataset"] == "d1"
+                   for r in JobJournal.load(srv.journal.path))
+        # the name is reusable and starts cold (no stale reuse)
+        job3 = wait_job(srv.port, "d1", upload(srv.port, "d1", data))
+        assert job3["state"] == "done"
+        assert job3["exec_stats"]["segments_reused"] == 0
+    finally:
+        srv.close()
+
+
+# -- finished-job retention ----------------------------------------------------
+
+def test_finished_job_retention_cap_evicts_oldest():
+    q = JobQueue(workers=2, fn=lambda job: None, max_finished=3)
+    try:
+        jobs = [q.submit(f"ds{i}") for i in range(8)]
+        deadline = time.time() + 20
+        while q.depth():
+            assert time.time() < deadline
+            time.sleep(0.01)
+        while q.counts()["done"] > 3:          # eviction is synchronous,
+            assert time.time() < deadline      # but jobs finish async
+            time.sleep(0.01)
+        assert q.counts() == {"queued": 0, "running": 0, "done": 3,
+                              "failed": 0}
+        retained = q.list()
+        assert len(retained) == 3
+        assert q.get(jobs[0].id) is None       # oldest evicted
+        assert q.get(jobs[-1].id) is not None  # newest retained
+    finally:
+        q.shutdown()
+
+
+# -- webhook retries -----------------------------------------------------------
+
+def test_webhook_bounded_retries():
+    hits = []
+
+    class Flaky(http.server.BaseHTTPRequestHandler):
+        def do_POST(self):
+            n = int(self.headers.get("Content-Length") or 0)
+            hits.append(json.loads(self.rfile.read(n)))
+            code = 500 if len(hits) <= 2 else 200
+            self.send_response(code)
+            self.send_header("Content-Length", "0")
+            self.end_headers()
+
+        def log_message(self, *a):
+            pass
+
+    sink = http.server.HTTPServer(("127.0.0.1", 0), Flaky)
+    threading.Thread(target=sink.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{sink.server_address[1]}/hook"
+    try:
+        # two 500s then a 200: succeeds within 3 attempts
+        assert post_webhook(url, {"x": 1}, retries=3, backoff=0.01)
+        assert len(hits) == 3
+        # injected hard failures: bounded, returns False, never raises
+        fault = ServiceFaultInjector(fail_webhooks=-1)
+        assert not post_webhook(url, {"x": 2}, retries=2, backoff=0.01,
+                                fault=fault)
+        assert len(hits) == 3                  # injector blocked the POSTs
+    finally:
+        sink.shutdown()
+        sink.server_close()
+
+
+def test_webhook_final_failure_counted_in_metrics(tmp_path):
+    faults = ServiceFaultInjector(fail_webhooks=-1)
+    srv = make_server(tmp_path, faults=faults, webhook_retries=2,
+                      webhook_backoff=0.01)
+    try:
+        st, doc, _ = req(srv.port, "PUT", "/datasets/wh",
+                         body=json.dumps({
+                             "alerts": ["L1 >= 0"],   # always fires
+                             "webhook": "http://127.0.0.1:9/hook",
+                         }).encode())
+        assert st == 201, doc
+        job = wait_job(srv.port, "wh",
+                       upload(srv.port, "wh", bsbm_ntriples(20, seed=9)))
+        assert job["state"] == "done" and job["alerts_fired"] == 1
+        st, prom, _ = req(srv.port, "GET", "/metrics")
+        assert 'repro_webhook_failures_total{dataset="wh"} 1' \
+            in prom.decode()
+        # the alert record itself is durable regardless of the webhook
+        st, doc, _ = req(srv.port, "GET", "/datasets/wh/alerts")
+        assert len(doc["alerts"]) == 1
+    finally:
+        srv.close()
+
+
+# -- kill -9 durability (the tentpole guarantee) -------------------------------
+
+_RUNNER = textwrap.dedent("""\
+    import sys, time
+    root, portfile, mode = sys.argv[1], sys.argv[2], sys.argv[3]
+    from repro.serve import QAServer, ServerConfig, ServiceFaultInjector
+    faults = None
+    if mode == "slow":
+        faults = ServiceFaultInjector(
+            slow_jobs={"ds1": 5.0, "ds2": 5.0, "ds3": 5.0})
+    srv = QAServer(ServerConfig(
+        store_root=root, metrics="paper",
+        base=("http://bsbm.example.org/",), workers=1,
+        segment_bytes=4096, watch=False, retry_base=0.05),
+        port=0, faults=faults).start()
+    with open(portfile + ".tmp", "w") as f:
+        f.write(str(srv.port))
+    import os
+    os.replace(portfile + ".tmp", portfile)
+    while True:
+        time.sleep(1)
+""")
+
+
+def _spawn_daemon(runner, root, portfile, mode):
+    if os.path.exists(portfile):
+        os.remove(portfile)
+    proc = subprocess.Popen(
+        [sys.executable, os.fspath(runner), os.fspath(root),
+         os.fspath(portfile), mode],
+        env={**os.environ, "PYTHONPATH": SRC},
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+    deadline = time.time() + 180
+    while not os.path.exists(portfile):
+        if proc.poll() is not None:
+            raise AssertionError(
+                f"daemon died at startup: "
+                f"{proc.communicate()[1].decode()[-3000:]}")
+        assert time.time() < deadline, "daemon never came up"
+        time.sleep(0.05)
+    with open(portfile) as f:
+        return proc, int(f.read())
+
+
+def test_kill9_mid_queue_replays_all_accepted_jobs_bit_identical(tmp_path):
+    """SIGKILL a daemon with one job running and two queued: the journal
+    must carry all three, and the restarted daemon must complete them
+    under their original ids with values AND registers bit-identical to
+    an uninterrupted run."""
+    runner = tmp_path / "runner.py"
+    runner.write_text(_RUNNER)
+    root = tmp_path / "root"
+    portfile = tmp_path / "port"
+    datasets = {f"ds{i}": bsbm_ntriples(40, seed=10 + i)
+                for i in (1, 2, 3)}
+
+    proc, port = _spawn_daemon(runner, root, portfile, "slow")
+    try:
+        job_ids = {name: upload(port, name, data)
+                   for name, data in datasets.items()}
+        # wait until the first job is genuinely mid-run, then kill -9
+        deadline = time.time() + 60
+        while True:
+            st, job, _ = req(port, "GET",
+                             f"/datasets/ds1/jobs/{job_ids['ds1']}")
+            if job["state"] == "running":
+                break
+            assert time.time() < deadline, job
+            time.sleep(0.01)
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    # the fsync'd journal names every accepted job as unfinished
+    unfinished, max_id = JobJournal.replay(
+        os.path.join(os.fspath(root), "jobs.jsonl"))
+    assert {r["id"] for r in unfinished} == set(job_ids.values())
+    assert max_id == max(job_ids.values())
+
+    proc2, port2 = _spawn_daemon(runner, root, portfile, "clean")
+    try:
+        for name, data in datasets.items():
+            job = wait_job(port2, name, job_ids[name])   # original id
+            assert job["state"] == "done", (name, job["error"])
+            cold = qa.assess(data, metrics="paper", base=BASE)
+            assert job["values"] == {k: float(v) for k, v in
+                                     sorted(cold.values.items())}
+            assert job["n_triples"] == cold.n_triples
+            # registers: a warm run over the replayed job's store is pure
+            # reuse and bit-identical to the uninterrupted cold run
+            warm = qa.assess(data, metrics="paper", base=BASE,
+                             store=os.path.join(os.fspath(root), name,
+                                                "store"),
+                             segment_bytes=4096)
+            assert warm.exec_stats.segments_rescanned == 0
+            assert warm.values == cold.values
+            for k in cold.registers:
+                assert np.array_equal(warm.registers[k],
+                                      cold.registers[k])
+        st, prom, _ = req(port2, "GET", "/metrics")
+        text = prom.decode()
+        replayed = sum(
+            int(line.rsplit(" ", 1)[1])
+            for line in text.splitlines()
+            if line.startswith("repro_jobs_replayed_total{"))
+        assert replayed == 3
+    finally:
+        os.kill(proc2.pid, signal.SIGKILL)
+        proc2.wait(timeout=30)
+
+
+# -- graceful shutdown ---------------------------------------------------------
+
+def test_sigterm_drains_and_exits_zero(tmp_path):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.qa_serve", "--port", "0",
+         "--store-root", os.fspath(tmp_path / "root"), "--no-watch"],
+        env={**os.environ, "PYTHONPATH": SRC},
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    lines = []
+    banner = threading.Event()
+
+    def read_stderr():
+        for line in proc.stderr:
+            lines.append(line)
+            if line.startswith("# repro.serve on http://"):
+                banner.set()
+
+    t = threading.Thread(target=read_stderr, daemon=True)
+    t.start()
+    try:
+        assert banner.wait(180), f"no startup banner: {''.join(lines)}"
+        proc.send_signal(signal.SIGTERM)
+        proc.wait(timeout=60)
+        t.join(timeout=10)
+        err = "".join(lines)
+        assert proc.returncode == 0, err
+        assert "SIGTERM" in err and "clean shutdown" in err
+    finally:
+        if proc.poll() is None:
+            proc.kill()
