@@ -1,0 +1,187 @@
+"""Catalog fleet benchmark — cold vs warm crawl over many datasets.
+
+  PYTHONPATH=src python -m benchmarks.fig_catalog [--smoke]
+
+Emits ``results/BENCH_catalog.json`` with a three-phase ladder over a
+synthetic multi-dataset catalog (one segment store per dataset under a
+single catalog root, crawled by ``repro.catalog``):
+
+* **cold** — empty catalog root: every dataset fully scanned and frozen;
+* **warm** — unchanged catalog: every dataset served from frozen state.
+  Target: 0 bytes rescanned fleet-wide, and 0 dictionary footprints
+  replayed (lazy replay — warm runs skip the replay work entirely);
+* **edit_one** — ONE dataset gets a contiguous ~2% in-place mutation:
+  only that dataset rescans its changed segments, every other dataset
+  stays at 0 bytes.
+
+The exactness gate runs per dataset, per phase: the crawl's metric
+values AND merged HLL register banks must be ``np.array_equal`` to a
+standalone ``qa.assess`` of the same file — the fleet layer adds
+amortization and isolation, never a different answer.  Any mismatch
+aborts the benchmark.
+
+``--smoke`` shrinks the fleet for CI; the JSON is uploaded as a workflow
+artifact.  ``scripts/check.sh`` gates on the smoke numbers (warm crawl
+must rescan 0 bytes; the edit phase must rescan bytes only in the edited
+dataset).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro import catalog, qa
+from repro.rdf import bsbm_ntriples
+
+from .common import save_json
+
+BSBM_NS = ("http://bsbm.example.org/",)
+
+N_DATASETS, SMOKE_N_DATASETS = 8, 3
+N_PRODUCTS, SMOKE_N_PRODUCTS = 2_000, 300
+SEGMENT_BYTES, SMOKE_SEGMENT_BYTES = 65_536, 8_192
+WORKERS = 4
+
+
+def _check_exact(summary: dict, refs) -> None:
+    """Every crawled dataset must match a standalone assessment exactly
+    (values and registers) — abort the benchmark otherwise."""
+    for ref in refs:
+        got = summary["results"][ref.name]
+        want = qa.assess(ref.path, metrics="all", base=BSBM_NS)
+        if got.values != want.values:
+            raise SystemExit(f"EXACTNESS VIOLATION: {ref.name} values "
+                             f"differ from standalone qa.assess")
+        if set(got.registers) != set(want.registers) or not all(
+                np.array_equal(got.registers[k], want.registers[k])
+                for k in want.registers):
+            raise SystemExit(f"EXACTNESS VIOLATION: {ref.name} HLL "
+                             f"registers differ from standalone "
+                             f"qa.assess")
+
+
+def _phase(name: str, src: str, root: str, segment_bytes: int,
+           workers: int) -> dict:
+    refs = catalog.discover(src)
+    t0 = time.perf_counter()
+    summary = catalog.crawl_catalog(
+        src, root, metrics="all", base=BSBM_NS, workers=workers,
+        segment_bytes=segment_bytes, keep_results=True)
+    wall = time.perf_counter() - t0
+    if summary["n_failed"]:
+        raise SystemExit(f"{name}: {summary['n_failed']} dataset(s) "
+                         "failed — benchmark corpus should never fail")
+    _check_exact(summary, refs)
+    per_dataset = {
+        rec["name"]: {
+            "bytes_total": rec["bytes_total"],
+            "bytes_rescanned": rec["bytes_rescanned"],
+            "segments_reused": rec["segments_reused"],
+            "segments_rescanned": rec["segments_rescanned"],
+            "footprints_replayed": rec["footprints_replayed"],
+            "wall_s": rec["wall_seconds"],
+        } for rec in summary["datasets"]}
+    row = {
+        "phase": name,
+        "wall_s": wall,
+        "n_datasets": summary["n_datasets"],
+        "bytes_total": summary["bytes_total"],
+        "bytes_rescanned": summary["bytes_rescanned"],
+        "scan_fraction": (summary["bytes_rescanned"]
+                          / max(summary["bytes_total"], 1)),
+        "footprints_replayed": sum(d["footprints_replayed"]
+                                   for d in per_dataset.values()),
+        "exact": True,                      # _check_exact aborts if not
+        "datasets": per_dataset,
+    }
+    print(f"  {name:>9s}: {wall:7.3f}s | rescanned "
+          f"{row['bytes_rescanned']:,}/{row['bytes_total']:,} bytes "
+          f"({row['scan_fraction']:6.1%}) | footprints replayed "
+          f"{row['footprints_replayed']} | exact per dataset: yes",
+          flush=True)
+    return row
+
+
+def run(smoke: bool = False, out: str = "BENCH_catalog.json") -> dict:
+    n_datasets = SMOKE_N_DATASETS if smoke else N_DATASETS
+    n_products = SMOKE_N_PRODUCTS if smoke else N_PRODUCTS
+    segment_bytes = SMOKE_SEGMENT_BYTES if smoke else SEGMENT_BYTES
+    work = tempfile.mkdtemp(prefix="bench_catalog_")
+    src = os.path.join(work, "catalog")
+    root = os.path.join(work, "root")
+    os.makedirs(src)
+    for i in range(n_datasets):
+        with open(os.path.join(src, f"ds{i:02d}.nt"), "w") as f:
+            f.write(bsbm_ntriples(n_products, seed=100 + i))
+    fleet_bytes = sum(os.path.getsize(os.path.join(src, p))
+                      for p in os.listdir(src))
+    print(f"catalog: {n_datasets} datasets × {n_products} products "
+          f"({fleet_bytes:,} bytes fleet-wide) | segment target "
+          f"{segment_bytes:,} B | {WORKERS} workers", flush=True)
+
+    phases = [_phase("cold", src, root, segment_bytes, WORKERS),
+              _phase("warm", src, root, segment_bytes, WORKERS)]
+
+    # contiguous ~2% in-place mutation of ONE dataset
+    edited = os.path.join(src, "ds01.nt")
+    with open(edited, "rb") as f:
+        data = f.read()
+    a = data.find(b"\n", int(len(data) * 0.4)) + 1
+    b = data.find(b"\n", a + int(len(data) * 0.02)) + 1
+    repl = bsbm_ntriples(max(1, n_products // 50), seed=999).encode()
+    with open(edited, "wb") as f:
+        f.write(data[:a] + repl + data[b:])
+    edit = _phase("edit_one", src, root, segment_bytes, WORKERS)
+    phases.append(edit)
+
+    others_rescanned = sum(d["bytes_rescanned"]
+                           for n, d in edit["datasets"].items()
+                           if n != "ds01")
+    by_name = {p["phase"]: p for p in phases}
+    payload = {
+        "mode": "smoke" if smoke else "full",
+        "fleet": {"n_datasets": n_datasets, "n_products": n_products,
+                  "n_bytes": fleet_bytes, "segment_bytes": segment_bytes,
+                  "workers": WORKERS},
+        "phases": phases,
+        "warm_bytes_rescanned": by_name["warm"]["bytes_rescanned"],
+        "warm_footprints_replayed": by_name["warm"]["footprints_replayed"],
+        "edit_one_scan_fraction": edit["scan_fraction"],
+        "edit_one_other_datasets_bytes_rescanned": others_rescanned,
+        "warm_is_free": bool(by_name["warm"]["bytes_rescanned"] == 0
+                             and by_name["warm"]["footprints_replayed"]
+                             == 0),
+        "edit_isolated_to_one_dataset": bool(others_rescanned == 0),
+        "all_phases_exact": True,           # every phase gate passed
+        "speedup_cold_over_warm": (by_name["cold"]["wall_s"]
+                                   / max(by_name["warm"]["wall_s"],
+                                         1e-9)),
+    }
+    path = save_json(out, payload)
+    print(f"-> {path}")
+    if not payload["warm_is_free"]:
+        raise SystemExit("GATE FAILED: warm crawl rescanned bytes or "
+                         "replayed footprints")
+    if not payload["edit_isolated_to_one_dataset"]:
+        raise SystemExit("GATE FAILED: editing one dataset rescanned "
+                         "bytes in another")
+    shutil.rmtree(work, ignore_errors=True)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet for CI")
+    ap.add_argument("--out", default="BENCH_catalog.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

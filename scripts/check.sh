@@ -60,6 +60,48 @@ assert bench["all_phases_exact"], "incremental != cold in some phase"
 print(f"mutation-reuse gate OK: 1% mutation rescans {frac:.1%} of bytes")
 PY
 
+echo "== catalog fleet smoke gate =="
+# Three-dataset synthetic catalog: cold crawl freezes every store, then
+# ONE dataset is edited and the warm crawl must rescan bytes only there
+# (every other dataset: 0 bytes, 0 footprints replayed).  Exactness vs
+# standalone qa.assess is asserted per dataset inside the crawl helper.
+python - <<'PY'
+import os, tempfile
+from repro import catalog
+from repro.rdf import bsbm_ntriples
+
+work = tempfile.mkdtemp(prefix="check_catalog_")
+src, root = os.path.join(work, "cat"), os.path.join(work, "root")
+os.makedirs(src)
+for i in range(3):
+    with open(os.path.join(src, f"d{i}.nt"), "w") as f:
+        f.write(bsbm_ntriples(200, seed=i))
+kw = dict(base=("http://bsbm.example.org/",), segment_bytes=8192,
+          workers=2)
+cold = catalog.crawl_catalog(src, root, **kw)
+assert cold["n_failed"] == 0, cold
+with open(os.path.join(src, "d1.nt"), "a") as f:
+    f.write(bsbm_ntriples(5, seed=99))
+warm = catalog.crawl_catalog(src, root, **kw)
+per = {d["name"]: d for d in warm["datasets"]}
+assert per["d1"]["bytes_rescanned"] > 0, per
+for other in ("d0", "d2"):
+    assert per[other]["bytes_rescanned"] == 0, (
+        f"warm crawl rescanned bytes in untouched dataset {other}: "
+        f"{per[other]}")
+    assert per[other]["footprints_replayed"] == 0, per[other]
+rank = catalog.rank_catalog(root)
+assert rank["n_datasets"] == 3
+print(f"catalog gate OK: edit rescan confined to d1 "
+      f"({per['d1']['bytes_rescanned']:,} bytes), others 0")
+PY
+
+echo "== catalog benchmark smoke gate =="
+# Full ladder with per-dataset exactness + warm-is-free + edit-isolation
+# gates baked into the benchmark itself (it aborts on violation).
+python -m benchmarks.fig_catalog --smoke --out BENCH_catalog_smoke.json
+rm -f results/BENCH_catalog_smoke.json
+
 echo "== mesh scale-out smoke gate =="
 # Real 1->2 fake-device sweep: aborts unless every rung's values AND HLL
 # register banks are bit-identical to the 1-device run (uneven shards

@@ -1,0 +1,188 @@
+"""Fleet crawl: incremental assessment of every dataset in a catalog.
+
+One crawl = one pass over the discovered refs.  Each dataset gets its
+own segment store under the catalog root (``<root>/<name>/store/``), so
+a warm re-crawl rescans only the bytes that actually changed in each
+dataset — the same amortization ``repro.store`` gives a single dataset,
+multiplied across the fleet.
+
+Isolation rules mirror ``repro.serve``'s job engine:
+
+* datasets run on a bounded thread pool (``workers``) — the evaluator's
+  JAX work releases the GIL in the backends, and the per-dataset stores
+  never contend;
+* a failure is classified with ``serve.jobs.default_transient``:
+  transient ones (I/O hiccups) retry with exponential backoff up to
+  ``max_attempts``; permanent ones (corrupt content, bad config) fail
+  once.  Either way the failure is *recorded* in the summary and the
+  crawl continues — one corrupt dataset never kills the fleet;
+* a ref whose path does not exist is a permanent failure up front (no
+  retry: the classifier would call the ``FileNotFoundError`` transient,
+  but a missing catalog entry is a configuration error, not a hiccup).
+
+Every crawl appends one summary line to ``<root>/crawls.jsonl`` so the
+regression report can compare "this crawl" against "the previous one"
+even across processes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from ..serve.jobs import default_transient
+from .discovery import DatasetRef, discover
+
+CRAWLS_NAME = "crawls.jsonl"
+
+
+def store_dir(root: str, name: str) -> str:
+    """Per-dataset store location under the catalog root (mirrors the
+    service registry layout: ``<root>/<name>/store/``)."""
+    return os.path.join(root, name, "store")
+
+
+def _assess_one(ref: DatasetRef, root: str, *, metrics, backend, base,
+                segment_bytes: int, max_history: int,
+                max_attempts: int, retry_base: float) -> dict:
+    from .. import qa
+
+    rec = {"name": ref.name, "path": ref.path, "status": "failed",
+           "attempts": 0, "error": None}
+    t0 = time.monotonic()
+    if not os.path.isfile(ref.path):
+        rec["attempts"] = 1
+        rec["error"] = f"dataset file not found: {ref.path}"
+        rec["wall_seconds"] = time.monotonic() - t0
+        return rec
+
+    pipe = qa.pipeline().metrics(metrics).backend(backend)
+    if base:
+        pipe = pipe.base(*base)
+    pipe = pipe.incremental(
+        store_dir(root, ref.name), segment_bytes=segment_bytes,
+        dataset_uri=f"urn:repro:dataset:{ref.name}",
+        max_history=max_history)
+
+    last_exc: BaseException | None = None
+    for attempt in range(1, max(1, max_attempts) + 1):
+        rec["attempts"] = attempt
+        try:
+            result = pipe.run(ref.path)
+        except Exception as exc:            # noqa: BLE001 — recorded
+            last_exc = exc
+            if attempt < max_attempts and default_transient(exc):
+                time.sleep(retry_base * (2 ** (attempt - 1)))
+                continue
+            break
+        rec["status"] = "ok"
+        rec["error"] = None
+        rec["values"] = {k: float(v)
+                         for k, v in sorted(result.values.items())}
+        rec["n_triples"] = int(result.n_triples)
+        s = result.exec_stats
+        if s is not None:
+            rec["bytes_total"] = int(getattr(s, "bytes_total", 0))
+            rec["bytes_rescanned"] = int(getattr(s, "bytes_rescanned", 0))
+            rec["segments_reused"] = int(getattr(s, "segments_reused", 0))
+            rec["segments_rescanned"] = int(
+                getattr(s, "segments_rescanned", 0))
+            rec["footprints_replayed"] = int(
+                getattr(s, "footprints_replayed", 0))
+        rec["wall_seconds"] = time.monotonic() - t0
+        rec["_result"] = result             # popped before persistence
+        return rec
+    rec["error"] = f"{type(last_exc).__name__}: {last_exc}"
+    rec["wall_seconds"] = time.monotonic() - t0
+    return rec
+
+
+def crawl_catalog(source, root, *, metrics="all", backend="jnp",
+                  base=(), workers: int = 4, segment_bytes: int = 0,
+                  max_history: int = 0, max_attempts: int = 3,
+                  retry_base: float = 0.2, keep_results: bool = False,
+                  pattern: str = "*.nt") -> dict:
+    """Crawl every dataset in ``source`` into per-dataset stores under
+    ``root``; returns (and journals) the crawl summary.
+
+    The summary's ``datasets`` list is in discovery order regardless of
+    completion order, so two crawls of the same catalog are directly
+    comparable.  With ``keep_results=True`` the in-memory
+    ``AssessmentResult`` objects ride along under ``"results"`` (never
+    journaled) so callers can compare values *and HLL registers* against
+    a standalone ``qa.assess`` — the benchmark's exactness gate.
+    """
+    root = os.fspath(root)
+    os.makedirs(root, exist_ok=True)
+    refs = discover(source, pattern=pattern)
+    t0 = time.monotonic()
+
+    kw = dict(metrics=metrics, backend=backend, base=tuple(base),
+              segment_bytes=segment_bytes, max_history=max_history,
+              max_attempts=max_attempts, retry_base=retry_base)
+    records: list[dict] = [None] * len(refs)
+    if refs:
+        with ThreadPoolExecutor(max_workers=max(1, workers)) as pool:
+            futs = {pool.submit(_assess_one, ref, root, **kw): i
+                    for i, ref in enumerate(refs)}
+            for fut, i in futs.items():
+                records[i] = fut.result()
+
+    results = {}
+    for rec in records:
+        r = rec.pop("_result", None)
+        if r is not None:
+            results[rec["name"]] = r
+
+    ok = [r for r in records if r["status"] == "ok"]
+    summary = {
+        "generatedAtTime": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                         time.gmtime()),
+        "source": os.fspath(source),
+        "root": root,
+        "n_datasets": len(records),
+        "n_ok": len(ok),
+        "n_failed": len(records) - len(ok),
+        "bytes_total": sum(r.get("bytes_total", 0) for r in ok),
+        "bytes_rescanned": sum(r.get("bytes_rescanned", 0) for r in ok),
+        "segments_reused": sum(r.get("segments_reused", 0) for r in ok),
+        "segments_rescanned": sum(r.get("segments_rescanned", 0)
+                                  for r in ok),
+        "wall_seconds": time.monotonic() - t0,
+        "datasets": records,
+    }
+    _append_crawl(root, summary)
+    if keep_results:
+        summary["results"] = results
+    return summary
+
+
+_crawl_lock = threading.Lock()
+
+
+def _append_crawl(root: str, summary: dict) -> None:
+    line = json.dumps({k: v for k, v in summary.items()
+                       if k != "results"}, sort_keys=True)
+    with _crawl_lock, open(os.path.join(root, CRAWLS_NAME), "a") as f:
+        f.write(line + "\n")
+
+
+def load_crawls(root) -> list[dict]:
+    """Crawl summaries in append order; torn tail lines are skipped the
+    same way ``core.report.load_history`` skips them."""
+    out = []
+    try:
+        with open(os.path.join(os.fspath(root), CRAWLS_NAME)) as f:
+            for ln in f:
+                ln = ln.strip()
+                if not ln:
+                    continue
+                try:
+                    out.append(json.loads(ln))
+                except ValueError:
+                    continue
+    except OSError:
+        pass
+    return out

@@ -1,0 +1,181 @@
+"""Catalog discovery: turn a catalog *source* into named dataset refs.
+
+The paper's motivation is 10,000+ public Linked Data datasets; a crawl
+has to start from some description of where they live.  Three source
+shapes are accepted, chosen by inspection:
+
+* a **directory tree** — every ``*.nt`` file below it is one dataset,
+  named by its root-relative path (``shops/berlin.nt`` →
+  ``shops__berlin``);
+* a **glob pattern** (the string contains ``*``/``?``/``[``) — every
+  match is one dataset, named by its basename;
+* a **JSON manifest** (an existing ``*.json`` path) — either a plain
+  mapping ``{"name": "path.nt", ...}``, a ``{"datasets": [{"name",
+  "path"}, ...]}`` list, or a DCAT-style document (``{"dataset":
+  [{"title"|"identifier", "distribution": [{"downloadURL"|
+  "accessURL"}]}]}`` — the shape of data.gov-style catalog dumps).
+  Relative paths resolve against the manifest's own directory.
+
+Names are sanitized into the same path-safe charset the service registry
+enforces (``[A-Za-z0-9][A-Za-z0-9._-]*``, max 64 chars) because each
+dataset gets a directory under the catalog root.  Two refs collapsing to
+one name is a configuration error, not a tie to break silently —
+``CatalogError`` names both sources.
+
+Discovery never touches dataset *content*: a ref whose path is missing
+or unreadable is still discovered, and the crawl records the failure in
+its summary while the rest of the fleet proceeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import re
+from typing import Iterable, Union
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]{0,63}$")
+_UNSAFE_RE = re.compile(r"[^A-Za-z0-9._-]")
+
+
+class CatalogError(ValueError):
+    """Invalid catalog source (bad manifest, duplicate dataset names)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetRef:
+    """One discovered dataset: a registry-safe name plus the path the
+    crawl will assess (existence is checked at crawl time, not here)."""
+    name: str
+    path: str
+
+
+def dataset_name(raw: str) -> str:
+    """Sanitize an arbitrary label into the registry-safe charset: path
+    separators become ``__``, anything else unsafe becomes ``_``, and
+    the result is clipped to 64 chars with an alphanumeric head."""
+    base = raw[:-3] if raw.endswith(".nt") else raw
+    base = base.replace("/", "__").replace(os.sep, "__")
+    base = _UNSAFE_RE.sub("_", base).lstrip("._-")
+    base = base[:64] or "dataset"
+    if not _NAME_RE.match(base):
+        base = ("d" + base)[:64]
+    return base
+
+
+def _check_unique(refs: list[DatasetRef]) -> list[DatasetRef]:
+    seen: dict[str, str] = {}
+    for ref in refs:
+        if ref.name in seen:
+            raise CatalogError(
+                f"duplicate dataset name {ref.name!r}: both "
+                f"{seen[ref.name]!r} and {ref.path!r} map to it — rename "
+                "one source or give explicit manifest names")
+        seen[ref.name] = ref.path
+    return refs
+
+
+def _from_tree(root: str, pattern: str) -> list[DatasetRef]:
+    refs = []
+    for base, _dirs, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            path = os.path.join(base, fn)
+            if glob.fnmatch.fnmatch(fn, pattern):
+                rel = os.path.relpath(path, root)
+                refs.append(DatasetRef(dataset_name(rel),
+                                       os.path.abspath(path)))
+    return refs
+
+
+def _from_glob(pattern: str) -> list[DatasetRef]:
+    return [DatasetRef(dataset_name(os.path.basename(p)),
+                       os.path.abspath(p))
+            for p in sorted(glob.glob(pattern, recursive=True))]
+
+
+def _manifest_path(entry: dict, base_dir: str) -> str | None:
+    """The dataset bytes a manifest entry points at: an explicit
+    ``path``, or the first N-Triples-looking DCAT distribution URL that
+    is a local file."""
+    path = entry.get("path")
+    if path is None:
+        for dist in entry.get("distribution") or []:
+            url = dist.get("downloadURL") or dist.get("accessURL")
+            if not url:
+                continue
+            if url.startswith("file://"):
+                url = url[len("file://"):]
+            path = url
+            break
+    if path is None:
+        return None
+    if not os.path.isabs(path):
+        path = os.path.join(base_dir, path)
+    return os.path.abspath(path)
+
+
+def _from_manifest(path: str) -> list[DatasetRef]:
+    base_dir = os.path.dirname(os.path.abspath(path))
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except ValueError as e:
+        raise CatalogError(f"manifest {path!r} is not valid JSON: {e}"
+                           ) from None
+    if isinstance(doc, dict) and ("datasets" in doc or "dataset" in doc):
+        entries = doc.get("datasets") or doc.get("dataset") or []
+        if not isinstance(entries, list):
+            raise CatalogError(
+                f"manifest {path!r}: 'datasets' must be a list")
+        refs = []
+        for i, e in enumerate(entries):
+            if not isinstance(e, dict):
+                raise CatalogError(
+                    f"manifest {path!r}: entry {i} is not an object")
+            raw = e.get("name") or e.get("title") or e.get("identifier")
+            p = _manifest_path(e, base_dir)
+            if not raw or not p:
+                raise CatalogError(
+                    f"manifest {path!r}: entry {i} needs a name/title "
+                    "and a path/distribution")
+            refs.append(DatasetRef(dataset_name(str(raw)), p))
+        return refs
+    if isinstance(doc, dict):
+        # plain mapping name -> path
+        refs = []
+        for raw, p in sorted(doc.items()):
+            if not isinstance(p, str):
+                raise CatalogError(
+                    f"manifest {path!r}: value for {raw!r} must be a "
+                    "path string")
+            if not os.path.isabs(p):
+                p = os.path.join(base_dir, p)
+            refs.append(DatasetRef(dataset_name(str(raw)),
+                                   os.path.abspath(p)))
+        return refs
+    raise CatalogError(
+        f"manifest {path!r}: expected an object (name->path mapping, "
+        "'datasets' list, or DCAT 'dataset' list)")
+
+
+def discover(source: Union[str, os.PathLike],
+             pattern: str = "*.nt") -> list[DatasetRef]:
+    """Resolve a catalog source into a deterministic, duplicate-free
+    list of ``DatasetRef``s (sorted walk/glob order; manifest order for
+    list manifests).  An empty catalog is a valid catalog: the crawl
+    simply has nothing to do."""
+    source = os.fspath(source)
+    if os.path.isdir(source):
+        return _check_unique(_from_tree(source, pattern))
+    if os.path.isfile(source) and source.endswith(".json"):
+        return _check_unique(_from_manifest(source))
+    if any(c in source for c in "*?["):
+        return _check_unique(_from_glob(source))
+    raise CatalogError(
+        f"catalog source {source!r} is neither a directory, a .json "
+        "manifest, nor a glob pattern")
+
+
+def names(refs: Iterable[DatasetRef]) -> list[str]:
+    return [r.name for r in refs]

@@ -137,6 +137,10 @@ class ChunkStats:
     segments_rescanned: int = 0
     bytes_total: int = 0
     bytes_rescanned: int = 0
+    # dictionary footprints actually replayed (lazy replay: reused
+    # segments after the last rescanned one never replay, and a fully
+    # warm run replays none)
+    footprints_replayed: int = 0
 
 
 class _ProducerError:

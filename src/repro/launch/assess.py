@@ -170,6 +170,14 @@ def main(argv=None):
                          "appends a snapshot to DIR/history.jsonl")
     ap.add_argument("--segment-bytes", type=int, default=0,
                     help="target segment size for --store (0 = default)")
+    ap.add_argument("--max-history", type=int, default=0, metavar="N",
+                    help="with --store: keep only the newest N snapshots "
+                         "in history.jsonl (0 = unbounded)")
+    ap.add_argument("--compact", action="store_true",
+                    help="with --store: maintenance mode — GC "
+                         "unreferenced segment files, rewrite the "
+                         "manifest, apply --max-history retention, then "
+                         "exit (no assessment; --nt not needed)")
     ap.add_argument("--watch", action="store_true",
                     help="with --nt and --store: poll the file and "
                          "re-assess on change (dataset monitoring)")
@@ -207,6 +215,20 @@ def main(argv=None):
             fwd += ["--poll-interval", str(args.watch_interval)]
         return qa_serve.main(fwd)
 
+    if args.compact:
+        if not args.store:
+            ap.error("--compact needs --store")
+        from repro.store import SegmentStore
+        stats = SegmentStore.compact_dir(args.store,
+                                         max_history=args.max_history)
+        print(f"# compacted {args.store}: "
+              f"{stats['segments_kept']} segment(s) kept, "
+              f"{stats['segments_removed']} removed "
+              f"({stats['bytes_reclaimed']:,} bytes reclaimed), "
+              f"{stats['history_dropped']} history snapshot(s) dropped",
+              file=sys.stderr)
+        return
+
     from repro import qa
     from repro.rdf import synth_encoded
 
@@ -224,7 +246,8 @@ def main(argv=None):
         pipe = pipe.speculative()
     if args.store:
         pipe = pipe.incremental(args.store,
-                                segment_bytes=args.segment_bytes)
+                                segment_bytes=args.segment_bytes,
+                                max_history=args.max_history)
     if args.mesh:
         from .mesh import make_assessment_mesh
         pipe = pipe.shard(make_assessment_mesh(args.mesh))

@@ -102,6 +102,18 @@ def main(argv=None):
         breaker_cooldown=args.breaker_cooldown,
         max_finished=args.max_finished)
     srv = QAServer(cfg, host=args.host, port=args.port).start()
+    # graceful shutdown: install the handlers BEFORE the startup banner —
+    # orchestrators (and tests) treat the banner as "ready" and may send
+    # SIGTERM immediately; a signal landing before installation would hit
+    # the default action and kill the process without draining
+    got = []
+
+    def _on_signal(signum, frame):
+        got.append(signal.Signals(signum).name)
+        srv.request_stop()
+
+    signal.signal(signal.SIGTERM, _on_signal)
+    signal.signal(signal.SIGINT, _on_signal)
     print(f"# repro.serve on http://{srv.host}:{srv.port} "
           f"(store root: {srv.registry.root}, {args.workers} workers, "
           f"backend {args.backend})", file=sys.stderr)
@@ -113,16 +125,10 @@ def main(argv=None):
           "(?format=nt for N-Triples)", file=sys.stderr)
     print("#   GET  /datasets/<name>/history trend report | /metrics | "
           "/healthz", file=sys.stderr)
-    # graceful shutdown: the handler only unblocks wait() (signal-safe);
-    # the main thread then drains jobs and flushes the journal in close()
-    got = []
-
-    def _on_signal(signum, frame):
-        got.append(signal.Signals(signum).name)
-        srv.request_stop()
-
-    signal.signal(signal.SIGTERM, _on_signal)
-    signal.signal(signal.SIGINT, _on_signal)
+    print("#   GET  /catalog/ranking        cross-dataset quality "
+          "ranking (?format=md)", file=sys.stderr)
+    # the handler only unblocks wait() (signal-safe); the main thread
+    # then drains jobs and flushes the journal in close()
     try:
         srv.wait()
     except KeyboardInterrupt:       # SIGINT before the handler was set

@@ -59,6 +59,9 @@ class ExecutionConfig:
     speculate: bool = False            # straggler backup copies (sync loop)
     store_dir: Optional[str] = None    # segment store: incremental mode
     segment_bytes: int = 0             # target segment size (0 = default)
+    max_history: int = 0               # >0: keep only the newest N
+                                       # history.jsonl snapshots (fleet
+                                       # crawls append one per crawl)
     dataset_uri: Optional[str] = None  # provenance URI for reports/history
                                        # (multi-tenant serving labels each
                                        # dataset; None = the default urn)
@@ -80,6 +83,9 @@ class ExecutionConfig:
         if self.segment_bytes < 0:
             raise ValueError(
                 f"segment_bytes must be >= 0, got {self.segment_bytes}")
+        if self.max_history < 0:
+            raise ValueError(
+                f"max_history must be >= 0, got {self.max_history}")
 
 
 def _resolve_metrics(spec) -> tuple[str, ...]:
@@ -231,7 +237,8 @@ class Pipeline:
         return self._exec(speculate=bool(flag))
 
     def incremental(self, store_dir: str, *, segment_bytes: int = 0,
-                    dataset_uri: Optional[str] = None) -> "Pipeline":
+                    dataset_uri: Optional[str] = None,
+                    max_history: int = 0) -> "Pipeline":
         """Incremental assessment against the persistent segment store at
         ``store_dir`` (``repro.store``): the dataset is split into
         content-defined segments, unchanged segments are served from their
@@ -242,11 +249,14 @@ class Pipeline:
         snapshot to the store's quality history.  ``segment_bytes`` tunes
         the target segment size (0 = ``repro.store.DEFAULT_TARGET_BYTES``);
         ``dataset_uri`` labels history snapshots and DQV reports (the
-        multi-tenant service names each dataset; None = default urn).
+        multi-tenant service names each dataset; None = default urn);
+        ``max_history > 0`` bounds the store's ``history.jsonl`` to the
+        newest that many snapshots (oldest dropped atomically).
         """
         return self._exec(store_dir=os.fspath(store_dir),
                           segment_bytes=int(segment_bytes),
-                          dataset_uri=dataset_uri)
+                          dataset_uri=dataset_uri,
+                          max_history=int(max_history))
 
     def single_shot(self) -> "Pipeline":
         return self._exec(chunks=0, checkpoint_dir=None, stream_triples=0,
@@ -342,7 +352,8 @@ class Pipeline:
         return assess_incremental(
             self.evaluator(), self._segments(dataset), self.exec.store_dir,
             base_namespaces=self.base_ns, prefetch=self.exec.prefetch,
-            speculate=self.exec.speculate, **kw)
+            speculate=self.exec.speculate,
+            max_history=self.exec.max_history, **kw)
 
     # -- ingest ----------------------------------------------------------------
     def _encode(self, text: str) -> TripleTensor:

@@ -480,6 +480,25 @@ def _h_metrics(srv, handler, m, q):
     return 200, srv.obs.render().encode(), PROM_CT
 
 
+def _h_catalog_ranking(srv, handler, m, q):
+    """Cross-dataset quality ranking over every registered dataset's
+    snapshot history — ``repro.catalog``'s ranking applied to the
+    service registry instead of a crawl root.  ``?format=md`` returns
+    the markdown dashboard."""
+    from ..catalog import rank_histories, ranking_markdown
+    from ..core import report
+    histories = {}
+    for name in srv.registry.names():
+        hist = report.load_history(srv.registry.history_path(name))
+        if hist:
+            histories[name] = hist
+    doc = rank_histories(histories)
+    fmt = (q.get("format") or [""])[0].lower()
+    if fmt in ("md", "markdown"):
+        return 200, ranking_markdown(doc).encode(), "text/markdown"
+    return 200, _json_bytes(doc), JSON_CT
+
+
 def _h_datasets(srv, handler, m, q):
     return 200, _json_bytes(
         {"datasets": [srv.registry.get(n).to_dict()
@@ -602,6 +621,8 @@ _NAME_PAT = r"([^/]+)"
 _ROUTES = [
     ("GET", "healthz", re.compile(r"^/healthz$"), _h_healthz),
     ("GET", "metrics", re.compile(r"^/metrics$"), _h_metrics),
+    ("GET", "catalog_ranking", re.compile(r"^/catalog/ranking$"),
+     _h_catalog_ranking),
     ("GET", "datasets", re.compile(r"^/datasets/?$"), _h_datasets),
     ("PUT", "register", re.compile(rf"^/datasets/{_NAME_PAT}$"),
      _h_register),

@@ -24,15 +24,19 @@ Consequences:
   state file — counts merge additively per occurrence, registers
   idempotently.
 
-The runner still rebuilds the canonical ("cold") dictionary on every run
-— without re-reading unchanged bytes — by replaying each segment's
-persisted **dictionary footprint** (its distinct term keys with metadata,
-in first-appearance order) through ``TermDictionary.intern_keys_batch``
-in segment order.  Replay is no longer a reuse *gate*; it keeps rescanned
-segments encoding against a fully-populated dictionary whose id
-assignment equals the cold run's (so persisted footprint ids stay
-meaningful for debugging and the id planes of any rescan match a cold
-encode bit-for-bit).
+The runner can still rebuild the canonical ("cold") dictionary — without
+re-reading unchanged bytes — by replaying each segment's persisted
+**dictionary footprint** (its distinct term keys with metadata, in
+first-appearance order) through ``TermDictionary.intern_keys_batch`` in
+segment order.  Replay is no longer a reuse *gate*; it only keeps
+rescanned segments encoding against a fully-populated dictionary whose
+id assignment equals the cold run's — so it is **lazy**: reused
+footprints are queued and interned just before the next rescan encodes,
+which means a fully warm run replays nothing, and reused segments after
+the last rescanned one are never replayed (``exec_stats.
+footprints_replayed`` counts the ones that were).  Plans that read raw
+id planes (user-registered metrics) keep the eager replay-and-compare
+gate, exactly as before.
 
 Rescans run through the ordinary ``dist.ChunkScheduler`` (any backend,
 retries, optional ``prefetch`` pipelining); its ``on_chunk`` hook freezes
@@ -159,6 +163,7 @@ def assess_incremental(evaluator: QualityEvaluator,
                        straggler_factor: float = 4.0,
                        speculate: bool = False,
                        history: bool = True,
+                       max_history: int = 0,
                        dataset_uri: str = "urn:repro:dataset",
                        ) -> AssessmentResult:
     """Assess ``segments`` (ordered raw byte segments of one dataset)
@@ -186,6 +191,22 @@ def assess_incremental(evaluator: QualityEvaluator,
     reused: list[SegmentState] = []
     rescan_meta: dict[int, dict] = {}   # cid -> frozen-state ingredients
     nbytes = {"total": 0, "rescanned": 0}
+    replayed = [0]                # footprints actually interned
+    deferred: list[SegmentState] = []   # reused, replay not yet needed
+
+    def replay_deferred():
+        """Intern the footprints of every reused segment queued so far —
+        called just before a rescan encodes, so the rescanned segment's
+        terms land at their cold ids.  Lazy replay: a fully warm run
+        never calls this, and reused segments *after* the last rescan
+        are never replayed at all (nothing downstream encodes against
+        them) — warm re-crawls of many-segment stores skip the whole
+        dictionary rebuild."""
+        for st in deferred:
+            d.intern_keys_batch(st.keys, st.flags, st.lengths,
+                                st.datatypes)
+        replayed[0] += len(deferred)
+        deferred.clear()
 
     def produce():
         """Sequential segment walk: replay-or-rescan.  Runs on the
@@ -200,18 +221,31 @@ def assess_incremental(evaluator: QualityEvaluator,
                 # The footprint replay keeps the shared dictionary
                 # canonical (cold-identical ids) for this run's rescans;
                 # for content-determined plans it is NOT a reuse gate —
-                # unchanged bytes ⇒ the frozen state is valid as-is.
-                ids = d.intern_keys_batch(st.keys, st.flags, st.lengths,
-                                          st.datatypes)
-                if content_determined or np.array_equal(ids, st.ids):
+                # unchanged bytes ⇒ the frozen state is valid as-is, so
+                # the replay is deferred until a rescan actually needs
+                # the dictionary positioned (possibly never).
+                if content_determined:
+                    deferred.append(st)
                     reused.append(st)
                     order.append({"fp": fp, "n_bytes": len(seg),
                                   "n_triples": st.n_triples})
                     continue
-                # id-plane-reading user metric + shifted id environment:
-                # registers/counters are stale, rescan below (the replay
-                # already positioned this segment's terms at their cold
-                # ids, so re-encoding is id-stable)
+                # id-plane-reading user metric: frozen state is only
+                # valid under the exact cold id assignment, so the
+                # replay stays eager and gates reuse (PR 4 semantics)
+                ids = d.intern_keys_batch(st.keys, st.flags, st.lengths,
+                                          st.datatypes)
+                replayed[0] += 1
+                if np.array_equal(ids, st.ids):
+                    reused.append(st)
+                    order.append({"fp": fp, "n_bytes": len(seg),
+                                  "n_triples": st.n_triples})
+                    continue
+                # shifted id environment: registers/counters are stale,
+                # rescan below (the replay already positioned this
+                # segment's terms at their cold ids, so re-encoding is
+                # id-stable)
+            replay_deferred()
             nbytes["rescanned"] += len(seg)
             tt = rdf_ingest.parse_encode(seg, dictionary=d)
             ids = _footprint_ids(tt.planes)
@@ -297,6 +331,7 @@ def assess_incremental(evaluator: QualityEvaluator,
     stats.segments_rescanned = rescanned[0]
     stats.bytes_total = nbytes["total"]
     stats.bytes_rescanned = nbytes["rescanned"]
+    stats.footprints_replayed = replayed[0]
     stats.wall_seconds = time.perf_counter() - t0
     result.exec_stats = stats
 
@@ -304,5 +339,5 @@ def assess_incremental(evaluator: QualityEvaluator,
     if history:
         from ..core import report
         store.append_history(report.history_entry(
-            result, dataset_uri=dataset_uri))
+            result, dataset_uri=dataset_uri), max_history=max_history)
     return result

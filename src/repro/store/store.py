@@ -330,6 +330,79 @@ class SegmentStore:
                 pass
         return freed
 
+    def compact(self, *, max_history: int = 0,
+                grace: float = 0.0) -> dict:
+        """Explicit store maintenance for long edit histories: reclaim
+        every ``.seg`` file the committed manifest no longer references
+        and rewrite the on-disk artifacts in place.
+
+        The per-commit GC spares unreferenced state files younger than
+        ``GC_GRACE_SECONDS`` (they may be a concurrent runner's
+        uncommitted work), so a burst of edits leaves stale segments on
+        disk for up to ten minutes.  ``compact()`` is the administrative
+        "really clean now": it collects unreferenced files older than
+        ``grace`` (default 0 — everything; raise it when concurrent
+        runners may be mid-freeze), canonically rewrites the manifest,
+        and, with ``max_history > 0``, truncates ``history.jsonl`` to its
+        newest ``max_history`` snapshots.  Everything runs under the
+        store's commit flock, and liveness is judged against the *disk*
+        manifest regardless of engine signature — compacting never
+        deletes another engine's referenced state.
+
+        Returns ``{"segments_kept", "segments_removed",
+        "bytes_reclaimed", "history_dropped"}``.  A compacted store
+        reuses exactly what the uncompacted one would have.
+        """
+        stats = {"segments_kept": 0, "segments_removed": 0,
+                 "bytes_reclaimed": 0, "history_dropped": 0}
+        with self._commit_lock():
+            disk = self._disk_manifest_raw()
+            live = {s["fp"] for s in disk.get("segments", [])}
+            live |= set(self._pending)          # this run's own freezes
+            now = time.time()
+            for name in os.listdir(self._seg_dir):
+                if not name.endswith(".seg"):
+                    continue
+                path = os.path.join(self._seg_dir, name)
+                if name[:-4] in live:
+                    stats["segments_kept"] += 1
+                    continue
+                try:
+                    if now - os.path.getmtime(path) < grace:
+                        continue
+                    size = os.path.getsize(path)
+                    os.remove(path)
+                    stats["segments_removed"] += 1
+                    stats["bytes_reclaimed"] += size
+                except OSError:
+                    pass
+            if disk:
+                # canonical rewrite: same payload, freshly serialized
+                # (a manifest that accreted through many CAS'd commits
+                # is re-emitted in one clean write)
+                doc = {"payload": disk,
+                       "digest": _digest(json.dumps(
+                           disk, sort_keys=True).encode())}
+                self._atomic_write(self.manifest_path,
+                                   json.dumps(doc, indent=2).encode())
+            if max_history > 0:
+                stats["history_dropped"] = self._truncate_history_locked(
+                    max_history)
+        return stats
+
+    @classmethod
+    def compact_dir(cls, directory, *, max_history: int = 0,
+                    grace: float = 0.0) -> dict:
+        """Compact the store at ``directory`` without knowing its engine
+        signature (the CLI maintenance hook).  A path that never held a
+        store returns all-zero stats."""
+        directory = os.fspath(directory)
+        if not os.path.isdir(os.path.join(directory, "segments")):
+            return {"segments_kept": 0, "segments_removed": 0,
+                    "bytes_reclaimed": 0, "history_dropped": 0}
+        return cls(directory, signature={}).compact(
+            max_history=max_history, grace=grace)
+
     def _gc(self, live: set) -> None:
         """Remove state files not referenced by the manifest just written
         — except *fresh* ones (younger than ``GC_GRACE_SECONDS``), which
@@ -428,9 +501,46 @@ class SegmentStore:
             return None
 
     # -- history ---------------------------------------------------------------
-    def append_history(self, entry: dict) -> None:
-        with open(self.history_path, "a") as f:
-            f.write(json.dumps(entry, sort_keys=True) + "\n")
+    def append_history(self, entry: dict, *, max_history: int = 0) -> None:
+        """Append one quality snapshot.  ``max_history > 0`` bounds the
+        file: after the append, only the newest ``max_history`` snapshots
+        remain (oldest dropped by an atomic rewrite) — fleet crawls
+        append one snapshot per dataset per crawl, so unbounded growth is
+        a real cost at catalog scale.  Retention runs under the commit
+        flock so two retained appenders never lose each other's line; a
+        plain append (``max_history=0``) stays lock-free as before."""
+        if max_history <= 0:
+            with open(self.history_path, "a") as f:
+                f.write(json.dumps(entry, sort_keys=True) + "\n")
+            return
+        with self._commit_lock():
+            lines = []
+            try:
+                with open(self.history_path) as f:
+                    lines = [ln for ln in f.read().splitlines()
+                             if ln.strip()]
+            except OSError:
+                pass
+            lines.append(json.dumps(entry, sort_keys=True))
+            self._atomic_write(self.history_path,
+                               ("\n".join(lines[-max_history:]) + "\n"
+                                ).encode())
+
+    def _truncate_history_locked(self, max_history: int) -> int:
+        """Drop all but the newest ``max_history`` snapshots (atomic
+        rewrite).  Caller must hold ``_commit_lock``.  Returns the number
+        of snapshots dropped."""
+        try:
+            with open(self.history_path) as f:
+                lines = [ln for ln in f.read().splitlines() if ln.strip()]
+        except OSError:
+            return 0
+        if len(lines) <= max_history:
+            return 0
+        keep = lines[-max_history:]
+        self._atomic_write(self.history_path,
+                           ("\n".join(keep) + "\n").encode())
+        return len(lines) - len(keep)
 
     def history(self) -> list[dict]:
         from ..core import report

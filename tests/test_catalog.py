@@ -1,0 +1,296 @@
+"""``repro.catalog`` — fleet-scale crawl over a dataset catalog.
+
+The contract under test: a crawl assesses every discovered dataset into
+its own segment store with results (values AND HLL registers) exactly
+equal to a standalone ``qa.assess`` of the same file; a warm re-crawl
+rescans 0 bytes fleet-wide; one bad dataset is recorded as failed while
+the rest of the crawl completes; ranking and regression reports are
+deterministic functions of the per-store histories.
+"""
+import json
+import os
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import catalog, qa
+from repro.catalog import CatalogError, DatasetRef
+from repro.rdf import bsbm_ntriples
+
+BASE = ("http://bsbm.example.org/",)
+SEG = 4096
+
+
+def make_catalog(root, specs):
+    """Write ``{name: n_products}`` datasets under ``root``; returns the
+    source dir."""
+    os.makedirs(root, exist_ok=True)
+    for i, (name, n) in enumerate(sorted(specs.items())):
+        with open(os.path.join(root, f"{name}.nt"), "w") as f:
+            f.write(bsbm_ntriples(n, seed=10 + i))
+    return os.fspath(root)
+
+
+def crawl(src, root, **kw):
+    kw.setdefault("base", BASE)
+    kw.setdefault("segment_bytes", SEG)
+    kw.setdefault("workers", 2)
+    return catalog.crawl_catalog(src, root, **kw)
+
+
+# -- discovery -----------------------------------------------------------------
+
+def test_discover_tree_names_from_relative_paths(tmp_path):
+    src = tmp_path / "cat"
+    (src / "sub").mkdir(parents=True)
+    (src / "a.nt").write_text("x")
+    (src / "sub" / "b.nt").write_text("x")
+    (src / "notes.txt").write_text("ignored")
+    refs = catalog.discover(src)
+    assert [(r.name, os.path.basename(r.path)) for r in refs] == \
+        [("a", "a.nt"), ("sub__b", "b.nt")]
+
+
+def test_discover_empty_catalog_is_valid(tmp_path):
+    (tmp_path / "empty").mkdir()
+    assert catalog.discover(tmp_path / "empty") == []
+    summary = crawl(tmp_path / "empty", tmp_path / "root")
+    assert summary["n_datasets"] == 0 and summary["n_failed"] == 0
+
+
+def test_discover_glob_pattern(tmp_path):
+    (tmp_path / "x1.nt").write_text("x")
+    (tmp_path / "x2.nt").write_text("x")
+    refs = catalog.discover(os.path.join(os.fspath(tmp_path), "x*.nt"))
+    assert [r.name for r in refs] == ["x1", "x2"]
+
+
+def test_discover_manifest_mapping_and_dcat(tmp_path):
+    (tmp_path / "d.nt").write_text("x")
+    plain = tmp_path / "plain.json"
+    plain.write_text(json.dumps({"my set": "d.nt"}))
+    refs = catalog.discover(plain)
+    # relative path resolves against the manifest dir; name sanitized
+    assert refs == [DatasetRef("my_set", os.fspath(tmp_path / "d.nt"))]
+
+    dcat = tmp_path / "dcat.json"
+    dcat.write_text(json.dumps({"dataset": [
+        {"title": "Shops Berlin",
+         "distribution": [{"downloadURL": f"file://{tmp_path}/d.nt"}]},
+    ]}))
+    refs = catalog.discover(dcat)
+    assert refs[0].name == "Shops_Berlin"
+    assert refs[0].path == os.fspath(tmp_path / "d.nt")
+
+
+def test_discover_duplicate_names_rejected(tmp_path):
+    man = tmp_path / "dup.json"
+    man.write_text(json.dumps({"a b": "x.nt", "a_b": "y.nt"}))
+    with pytest.raises(CatalogError, match="duplicate dataset name"):
+        catalog.discover(man)
+
+
+def test_discover_bad_sources_rejected(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(CatalogError, match="not valid JSON"):
+        catalog.discover(bad)
+    with pytest.raises(CatalogError, match="neither"):
+        catalog.discover(tmp_path / "does-not-exist")
+
+
+# -- crawl ---------------------------------------------------------------------
+
+def test_crawl_matches_standalone_assess_exactly(tmp_path):
+    src = make_catalog(tmp_path / "cat", {"p": 60, "q": 40, "r": 25})
+    summary = crawl(src, tmp_path / "root", keep_results=True)
+    assert summary["n_ok"] == 3 and summary["n_failed"] == 0
+    for ref in catalog.discover(src):
+        got = summary["results"][ref.name]
+        want = qa.assess(ref.path, base=BASE)
+        assert got.values == want.values
+        assert got.n_triples == want.n_triples
+        assert set(got.registers) == set(want.registers)
+        for k in want.registers:
+            np.testing.assert_array_equal(got.registers[k],
+                                          want.registers[k])
+
+
+def test_warm_recrawl_rescans_only_the_edited_dataset(tmp_path):
+    src = make_catalog(tmp_path / "cat", {"p": 60, "q": 40, "r": 25})
+    crawl(src, tmp_path / "root")
+
+    warm = crawl(src, tmp_path / "root")
+    assert warm["bytes_rescanned"] == 0
+    assert all(d["footprints_replayed"] == 0 for d in warm["datasets"])
+
+    # append to ONE dataset: only its tail segment rescans
+    with open(os.path.join(src, "q.nt"), "a") as f:
+        f.write(bsbm_ntriples(3, seed=77))
+    edit = crawl(src, tmp_path / "root", keep_results=True)
+    per = {d["name"]: d for d in edit["datasets"]}
+    assert per["q"]["bytes_rescanned"] > 0
+    assert per["p"]["bytes_rescanned"] == 0
+    assert per["r"]["bytes_rescanned"] == 0
+    want = qa.assess(os.path.join(src, "q.nt"), base=BASE)
+    assert edit["results"]["q"].values == want.values
+
+
+def test_crawl_records_failure_and_continues(tmp_path):
+    src = make_catalog(tmp_path / "cat", {"good": 40})
+    man = tmp_path / "man.json"
+    man.write_text(json.dumps({
+        "good": os.path.join(src, "good.nt"),
+        "gone": os.path.join(src, "missing.nt"),
+    }))
+    summary = crawl(man, tmp_path / "root")
+    per = {d["name"]: d for d in summary["datasets"]}
+    assert per["good"]["status"] == "ok"
+    assert per["gone"]["status"] == "failed"
+    assert "not found" in per["gone"]["error"]
+    # a missing catalog entry is a config error: no retry burned on it
+    assert per["gone"]["attempts"] == 1
+    assert summary["n_ok"] == 1 and summary["n_failed"] == 1
+    # the crawl summary is journaled either way
+    assert catalog.load_crawls(tmp_path / "root")[-1]["n_failed"] == 1
+
+
+def test_crawl_corrupt_dataset_fails_without_killing_fleet(tmp_path):
+    src = make_catalog(tmp_path / "cat", {"ok": 30})
+    # ingest rejects non-text garbage; the fleet records it and moves on
+    with open(os.path.join(src, "bad.nt"), "wb") as f:
+        f.write(b"\xff\xfe\x00garbage\x00" * 64)
+    summary = crawl(src, tmp_path / "root", max_attempts=2,
+                    retry_base=0.01)
+    per = {d["name"]: d for d in summary["datasets"]}
+    assert per["ok"]["status"] == "ok"
+    # whichever way the parser classifies the garbage, the crawl ends
+    # with the good dataset assessed and the bad one recorded
+    if per["bad"]["status"] == "failed":
+        assert per["bad"]["error"]
+
+
+# -- ranking & regression ------------------------------------------------------
+
+def test_ranking_deterministic_across_identical_crawls(tmp_path):
+    src = make_catalog(tmp_path / "cat", {"p": 60, "q": 40, "r": 25})
+    crawl(src, tmp_path / "root")
+    first = catalog.rank_catalog(tmp_path / "root")
+    crawl(src, tmp_path / "root")       # warm, appends identical values
+    second = catalog.rank_catalog(tmp_path / "root")
+
+    def stable(doc):        # snapshots differ only in their timestamps
+        return [{k: v for k, v in r.items() if k != "generatedAtTime"}
+                for r in doc["ranking"]]
+
+    assert stable(first) == stable(second)
+    assert first["metrics"] == second["metrics"]
+    assert [r["rank"] for r in first["ranking"]] == [1, 2, 3]
+    md = catalog.ranking_markdown(first)
+    for r in first["ranking"]:
+        assert r["name"] in md
+
+
+def test_regression_report_deltas_and_rules(tmp_path):
+    hists = {
+        "up": [{"values": {"m": 0.5}, "nTriples": 1},
+               {"values": {"m": 0.9}, "nTriples": 1}],
+        "down": [{"values": {"m": 0.9}, "nTriples": 1},
+                 {"values": {"m": 0.5}, "nTriples": 1}],
+        "new": [{"values": {"m": 0.2}, "nTriples": 1}],
+    }
+    doc = catalog.regression_report(
+        hists, rules=["delta(m) < -0.1", "m < 0.3"])
+    per = {d["name"]: d for d in doc["datasets"]}
+    assert per["up"]["improved"] == ["m"] and per["up"]["deltas"]["m"] \
+        == pytest.approx(0.4)
+    assert per["down"]["regressed"] == ["m"]
+    assert per["new"]["deltas"] == {} and per["new"]["previous"] is None
+    fired = {(f["name"], f["rule"]) for f in doc["fired"]}
+    assert fired == {("down", "delta(m) < -0.1"), ("new", "m < 0.3")}
+    md = catalog.regression_markdown(doc)
+    assert "down" in md and "delta(m) < -0.1" in md
+
+
+def test_regression_over_real_crawls(tmp_path):
+    src = make_catalog(tmp_path / "cat", {"p": 50, "q": 30})
+    crawl(src, tmp_path / "root")
+    crawl(src, tmp_path / "root")
+    doc = catalog.report_catalog(tmp_path / "root",
+                                 rules=["delta(no_bogus_uris) < -0.5"])
+    assert doc["n_with_previous"] == 2
+    assert doc["fired"] == []           # identical crawls: no movement
+    assert all(d["deltas"][m] == 0.0 for d in doc["datasets"]
+               for m in d["deltas"])
+
+
+# -- CLI and daemon surfaces ---------------------------------------------------
+
+def test_qa_catalog_cli_crawl_rank_report(tmp_path, capsys):
+    from repro.launch import qa_catalog
+    src = make_catalog(tmp_path / "cat", {"p": 40, "q": 25})
+    root = os.fspath(tmp_path / "root")
+    rc = qa_catalog.main(["crawl", "--source", src, "--root", root,
+                          "--segment-bytes", str(SEG),
+                          "--base", BASE[0]])
+    assert rc == 0
+    summary = json.loads(capsys.readouterr().out)
+    assert summary["n_ok"] == 2
+
+    rc = qa_catalog.main(["rank", "--root", root, "--format", "md"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "Catalog quality ranking" in out
+    assert "| p |" in out and "| q |" in out
+
+    rc = qa_catalog.main(["report", "--root", root,
+                          "--rule", "delta(no_bogus_uris) < -0.5"])
+    assert rc == 0                      # nothing fired on a warm repeat
+
+
+def test_serve_catalog_ranking_endpoint(tmp_path):
+    from repro.serve import QAServer, ServerConfig
+    srv = QAServer(ServerConfig(
+        store_root=os.fspath(tmp_path / "root"), metrics="paper",
+        base=BASE, workers=2, segment_bytes=SEG, watch=False),
+        port=0).start()
+    try:
+        def req(method, path, body=None):
+            r = urllib.request.Request(
+                f"http://127.0.0.1:{srv.port}{path}", data=body,
+                method=method)
+            with urllib.request.urlopen(r, timeout=30) as resp:
+                return resp.status, resp.read()
+
+        # empty registry: valid, empty ranking
+        st, raw = req("GET", "/catalog/ranking")
+        assert st == 200 and json.loads(raw)["n_datasets"] == 0
+
+        for name, n in [("dsa", 40), ("dsb", 25)]:
+            st, raw = req("PUT", f"/datasets/{name}/data",
+                          body=bsbm_ntriples(n, seed=5).encode())
+            assert st == 202
+            job = json.loads(raw)["job"]["id"]
+            deadline = 120
+            import time as _time
+            while deadline > 0:
+                st, raw = req("GET", f"/datasets/{name}/jobs/{job}")
+                if json.loads(raw)["state"] in ("done", "failed"):
+                    break
+                _time.sleep(0.05)
+                deadline -= 0.05
+            assert json.loads(raw)["state"] == "done"
+
+        st, raw = req("GET", "/catalog/ranking")
+        doc = json.loads(raw)
+        assert st == 200 and doc["n_datasets"] == 2
+        assert [r["rank"] for r in doc["ranking"]] == [1, 2]
+        assert doc["ranking"][0]["score"] >= doc["ranking"][1]["score"]
+        assert {r["name"] for r in doc["ranking"]} == {"dsa", "dsb"}
+
+        st, raw = req("GET", "/catalog/ranking?format=md")
+        assert st == 200
+        assert raw.decode().startswith("# Catalog quality ranking")
+    finally:
+        srv.close()

@@ -613,3 +613,118 @@ def test_history_written_per_run(tmp_path):
     assert hist[1]["segments_reused"] >= 1
     trend = report.to_dqv_history(hist)
     assert trend["snapshots"] == 2 and trend["metrics"]
+
+
+# --- lazy footprint replay ----------------------------------------------------
+
+def test_warm_run_replays_no_footprints(tmp_path):
+    """Fully warm no-change runs skip dictionary replay entirely (the
+    frozen planes already carry everything the merge needs) while
+    staying bit-identical to a cold assessment."""
+    data = corpus(300)
+    store = tmp_path / "st"
+    (tmp_path / "d.nt").write_bytes(data)
+    path = os.fspath(tmp_path / "d.nt")
+
+    cold = pipe(store=store).run(path)
+    assert cold.exec_stats.segments_rescanned > 4
+    assert cold.exec_stats.footprints_replayed == 0
+
+    warm = pipe(store=store).run(path)
+    assert warm.exec_stats.segments_rescanned == 0
+    assert warm.exec_stats.footprints_replayed == 0
+    assert_bit_identical(warm, cold)
+
+
+def test_edit_replays_only_preceding_footprints(tmp_path):
+    """A rescan needs cold-identical dictionary ids, so reused segments
+    BEFORE the first rescanned one replay their footprints — but
+    segments after the last rescan never do."""
+    data = corpus(300)
+    store = tmp_path / "st"
+    path = tmp_path / "d.nt"
+    path.write_bytes(data)
+    pipe(store=store).run(os.fspath(path))
+
+    # mutate one line near the start: nearly every reused segment sits
+    # AFTER the edit, so almost nothing replays
+    a = data.find(b"\n", len(data) // 20) + 1
+    b = data.find(b"\n", a) + 1
+    edited = data[:a] + b"<http://x/s> <http://x/p> <http://x/o> .\n" \
+        + data[b:]
+    path.write_bytes(edited)
+    res = pipe(store=store).run(os.fspath(path))
+    s = res.exec_stats
+    assert s.segments_rescanned >= 1
+    assert s.footprints_replayed <= 1       # at most the first segment
+    assert s.footprints_replayed < s.segments_reused
+    assert_bit_identical(res, pipe().run(os.fspath(path)))
+
+
+# --- compaction ---------------------------------------------------------------
+
+def test_compact_removes_stale_segments_and_keeps_reuse(tmp_path):
+    """Edits strand superseded ``.seg`` files (the per-commit GC spares
+    anything younger than its grace window); ``compact()`` reclaims them
+    immediately, and the compacted store still reuses everything."""
+    data = corpus(300)
+    store = tmp_path / "st"
+    path = tmp_path / "d.nt"
+    path.write_bytes(data)
+    pipe(store=store).run(os.fspath(path))
+
+    # rewrite a mid-file region twice: two generations of stale segments
+    for seed in (71, 72):
+        a = data.find(b"\n", len(data) // 2) + 1
+        b = data.find(b"\n", a + len(data) // 10) + 1
+        data = data[:a] + bsbm_ntriples(30, seed=seed).encode() + data[b:]
+        path.write_bytes(data)
+        pipe(store=store).run(os.fspath(path))
+
+    seg_dir = store / "segments"
+    st = SegmentStore(os.fspath(store), signature={})
+    live = {s["fp"] for s in st._disk_manifest_raw()["segments"]}
+    on_disk = {n[:-4] for n in os.listdir(seg_dir) if n.endswith(".seg")}
+    assert on_disk > live               # stale generations survived GC
+
+    stats = SegmentStore.compact_dir(store)
+    assert stats["segments_removed"] == len(on_disk - live)
+    assert stats["bytes_reclaimed"] > 0
+    now_on_disk = {n[:-4] for n in os.listdir(seg_dir)
+                   if n.endswith(".seg")}
+    assert now_on_disk == live
+
+    warm = pipe(store=store).run(os.fspath(path))
+    assert warm.exec_stats.segments_rescanned == 0
+    assert_bit_identical(warm, pipe().run(os.fspath(path)))
+
+    # a directory that never held a store compacts to all-zero stats
+    empty = SegmentStore.compact_dir(tmp_path / "nowhere")
+    assert empty == {"segments_kept": 0, "segments_removed": 0,
+                     "bytes_reclaimed": 0, "history_dropped": 0}
+
+
+# --- history retention --------------------------------------------------------
+
+def test_max_history_keeps_newest_snapshots(tmp_path):
+    data = corpus(80, seed=3)
+    store = tmp_path / "st"
+    path = tmp_path / "d.nt"
+    p = qa.pipeline().metrics("paper").base(*BASE).incremental(
+        os.fspath(store), segment_bytes=SEG, max_history=3)
+    for i in range(5):
+        path.write_bytes(data + bsbm_ntriples(i + 1, seed=i).encode())
+        p.run(os.fspath(path))
+    from repro.core import report
+    hist = report.load_history(store / "history.jsonl")
+    assert len(hist) == 3
+    # newest retained: triple counts strictly grew run over run
+    counts = [h["nTriples"] for h in hist]
+    assert counts == sorted(counts) and counts[-1] > counts[0]
+
+    # compact() applies the same retention on demand
+    stats = SegmentStore.compact_dir(store, max_history=1)
+    assert stats["history_dropped"] == 2
+    assert len(report.load_history(store / "history.jsonl")) == 1
+    with pytest.raises(ValueError, match="max_history"):
+        qa.ExecutionConfig(max_history=-1)
