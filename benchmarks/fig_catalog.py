@@ -174,13 +174,131 @@ def run(smoke: bool = False, out: str = "BENCH_catalog.json") -> dict:
     return payload
 
 
+def run_remote(out: str = "BENCH_catalog_remote.json") -> dict:
+    """``--remote-smoke``: the fleet ladder over an HTTP catalog served
+    by the in-process flaky origin — cold fetch, all-304 warm re-crawl,
+    and a chaos crawl (503 bursts, one torn body, one downed origin
+    path stale-served from cache).  Gates: warm fetches 0 bytes and
+    rescans 0 bytes; chaos completes with 0 failures and exact values
+    vs a standalone assessment of the served bytes."""
+    import json as _json
+
+    from repro.fetch import FlakyOriginServer, HttpFaultInjector
+
+    n_datasets, n_products = SMOKE_N_DATASETS, SMOKE_N_PRODUCTS
+    work = tempfile.mkdtemp(prefix="bench_catalog_remote_")
+    origin_dir = os.path.join(work, "origin")
+    root = os.path.join(work, "root")
+    os.makedirs(origin_dir)
+    texts = {}
+    entries = []
+    for i in range(n_datasets):
+        name = f"rds{i:02d}"
+        texts[name] = bsbm_ntriples(n_products, seed=300 + i)
+        with open(os.path.join(origin_dir, f"{name}.nt"), "w") as f:
+            f.write(texts[name])
+        entries.append({"title": name,
+                        "distribution": [{"downloadURL": f"{name}.nt"}]})
+    with open(os.path.join(origin_dir, "catalog.json"), "w") as f:
+        _json.dump({"dataset": entries}, f)
+
+    inj = HttpFaultInjector()
+    with FlakyOriginServer(origin_dir, inj) as origin:
+        src = origin.url_for("catalog.json")
+        kw = dict(metrics="all", base=BSBM_NS, workers=WORKERS,
+                  segment_bytes=SMOKE_SEGMENT_BYTES, keep_results=True,
+                  max_fetch_attempts=4)
+
+        def crawl_phase(name):
+            t0 = time.perf_counter()
+            summary = catalog.crawl_catalog(src, root, **kw)
+            wall = time.perf_counter() - t0
+            if summary["n_failed"]:
+                raise SystemExit(f"{name}: {summary['n_failed']} remote "
+                                 f"dataset(s) failed — "
+                                 f"{summary['datasets']}")
+            for dn, text in texts.items():
+                got = summary["results"][dn]
+                want = qa.assess(text, metrics="all", base=BSBM_NS)
+                if got.values != want.values or not all(
+                        np.array_equal(got.registers[k],
+                                       want.registers[k])
+                        for k in want.registers):
+                    raise SystemExit(f"EXACTNESS VIOLATION: remote "
+                                     f"{dn} differs from standalone "
+                                     f"qa.assess in phase {name}")
+            fetch = summary["fetch"]
+            print(f"  {name:>6s}: {wall:7.3f}s | fetched "
+                  f"{fetch['bytes_fetched']:,} bytes in "
+                  f"{fetch['attempts']} attempt(s) | "
+                  f"{fetch['not_modified']} × 304 | "
+                  f"{fetch['stale_served']} stale | rescanned "
+                  f"{summary['bytes_rescanned']:,} bytes", flush=True)
+            return {"phase": name, "wall_s": wall, "fetch": fetch,
+                    "bytes_rescanned": summary["bytes_rescanned"],
+                    "n_stale": sum(1 for d in summary["datasets"]
+                                   if d.get("stale"))}
+
+        print(f"remote catalog: {n_datasets} datasets over {origin.url} "
+              f"({WORKERS} workers)", flush=True)
+        cold = crawl_phase("cold")
+        warm = crawl_phase("warm")
+        # chaos: transient 503s on one path, a torn body on another,
+        # and a third path's origin goes dark (cache serves it stale)
+        inj.fail_requests["/rds00.nt"] = 2
+        inj.truncate_bodies["/rds01.nt"] = 1
+        inj.down.add("/rds02.nt")
+        # touch the faulted-but-reachable files so they really refetch
+        for name in ("rds00", "rds01"):
+            texts[name] += bsbm_ntriples(5, seed=400)
+            with open(os.path.join(origin_dir, f"{name}.nt"), "w") as f:
+                f.write(texts[name])
+        chaos = crawl_phase("chaos")
+
+    payload = {
+        "mode": "remote-smoke",
+        "fleet": {"n_datasets": n_datasets, "n_products": n_products,
+                  "workers": WORKERS},
+        "phases": [cold, warm, chaos],
+        "warm_bytes_fetched": warm["fetch"]["bytes_fetched"],
+        "warm_not_modified": warm["fetch"]["not_modified"],
+        "warm_bytes_rescanned": warm["bytes_rescanned"],
+        "chaos_attempts": chaos["fetch"]["attempts"],
+        "chaos_stale_served": chaos["fetch"]["stale_served"],
+        "all_phases_exact": True,
+        "warm_is_free": bool(
+            warm["fetch"]["bytes_fetched"] == 0
+            and warm["fetch"]["not_modified"] == n_datasets
+            and warm["bytes_rescanned"] == 0),
+        "chaos_survived": bool(chaos["n_stale"] == 1
+                               and chaos["fetch"]["attempts"]
+                               > chaos["fetch"]["requests"]),
+    }
+    path = save_json(out, payload)
+    print(f"-> {path}")
+    if not payload["warm_is_free"]:
+        raise SystemExit("GATE FAILED: warm remote crawl fetched or "
+                         "rescanned bytes (revalidation broken?)")
+    if not payload["chaos_survived"]:
+        raise SystemExit("GATE FAILED: chaos crawl did not retry/"
+                         "stale-serve as expected")
+    shutil.rmtree(work, ignore_errors=True)
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fleet for CI")
-    ap.add_argument("--out", default="BENCH_catalog.json")
+    ap.add_argument("--remote-smoke", action="store_true",
+                    help="remote-catalog ladder over the in-process "
+                         "flaky HTTP origin (cold/304-warm/chaos)")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    run(smoke=args.smoke, out=args.out)
+    if args.remote_smoke:
+        run_remote(out=args.out or "BENCH_catalog_remote.json")
+    else:
+        run(smoke=args.smoke, out=args.out or "BENCH_catalog.json")
 
 
 if __name__ == "__main__":

@@ -96,6 +96,58 @@ print(f"catalog gate OK: edit rescan confined to d1 "
       f"({per['d1']['bytes_rescanned']:,} bytes), others 0")
 PY
 
+echo "== remote catalog crawl gate =="
+# HTTP catalog over the in-process flaky origin: cold crawl localizes
+# every distribution through the fetch cache, then ONE origin file is
+# edited — the re-crawl must revalidate every other distribution with a
+# 304 (zero bytes fetched) and rescan bytes only in the changed
+# dataset.  fsck then verifies every frozen segment fleet-wide.
+python - <<'PY'
+import json, os, tempfile
+from repro import catalog
+from repro.fetch import FlakyOriginServer
+from repro.rdf import bsbm_ntriples
+
+work = tempfile.mkdtemp(prefix="check_remote_")
+origin_dir = os.path.join(work, "origin")
+root = os.path.join(work, "root")
+os.makedirs(origin_dir)
+entries = []
+for i in range(3):
+    with open(os.path.join(origin_dir, f"r{i}.nt"), "w") as f:
+        f.write(bsbm_ntriples(150, seed=40 + i))
+    entries.append({"title": f"r{i}",
+                    "distribution": [{"downloadURL": f"r{i}.nt"}]})
+with open(os.path.join(origin_dir, "catalog.json"), "w") as f:
+    json.dump({"dataset": entries}, f)
+kw = dict(base=("http://bsbm.example.org/",), segment_bytes=8192,
+          workers=2)
+with FlakyOriginServer(origin_dir) as origin:
+    src = origin.url_for("catalog.json")
+    cold = catalog.crawl_catalog(src, root, **kw)
+    assert cold["n_failed"] == 0, cold
+    with open(os.path.join(origin_dir, "r1.nt"), "a") as f:
+        f.write(bsbm_ntriples(5, seed=77))
+    warm = catalog.crawl_catalog(src, root, **kw)
+assert warm["n_failed"] == 0, warm
+per = {d["name"]: d for d in warm["datasets"]}
+assert per["r1"]["fetch"]["status"] == "fetched", per["r1"]
+assert per["r1"]["bytes_rescanned"] > 0, per["r1"]
+for other in ("r0", "r2"):
+    assert per[other]["fetch"]["not_modified"], (
+        f"unchanged remote {other} was not revalidated with a 304: "
+        f"{per[other]['fetch']}")
+    assert per[other]["bytes_rescanned"] == 0, per[other]
+import subprocess, sys
+rc = subprocess.run(
+    [sys.executable, "-m", "repro.launch.qa_catalog", "fsck",
+     "--root", root], stdout=subprocess.DEVNULL).returncode
+assert rc == 0, f"fsck reported damage after a clean remote crawl ({rc})"
+print(f"remote gate OK: edit refetched+rescanned only r1 "
+      f"({per['r1']['bytes_rescanned']:,} bytes), "
+      f"others 304'd; fsck clean")
+PY
+
 echo "== catalog benchmark smoke gate =="
 # Full ladder with per-dataset exactness + warm-is-free + edit-isolation
 # gates baked into the benchmark itself (it aborts on violation).

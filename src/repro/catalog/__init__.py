@@ -14,24 +14,31 @@ failure isolation::
                                      rules=["delta(no_bogus_uris) < -0.05"])
 
 Catalog sources (``catalog.discover``): a directory tree of ``.nt``
-files, a glob pattern, or a JSON manifest (plain name→path mapping, a
-``datasets`` list, or DCAT-style ``dataset`` entries).
+files, a glob pattern, a JSON manifest (plain name→path mapping, a
+``datasets`` list, or DCAT-style ``dataset`` entries), or an
+``http(s)://`` manifest URL.  Remote distributions are localized
+through ``repro.fetch`` — retry/backoff, ETag revalidation, Range
+resume, checksum verification, stale-serve degradation — into a shared
+download cache under the catalog root.
 
 A warm re-crawl reuses each dataset's store, so only changed bytes are
-rescanned anywhere in the fleet; rankings and regression reports are
-derived purely from the per-store ``history.jsonl`` snapshots.  CLI:
-``python -m repro.launch.qa_catalog crawl|rank|report|compact``.
+rescanned anywhere in the fleet (an unchanged remote distribution is a
+304: zero bytes fetched, zero bytes rescanned); rankings and regression
+reports are derived purely from the per-store ``history.jsonl``
+snapshots.  CLI: ``python -m repro.launch.qa_catalog
+crawl|rank|report|compact|fsck``.
 """
-from .crawl import crawl_catalog, load_crawls, store_dir
-from .discovery import CatalogError, DatasetRef, dataset_name, discover
+from .crawl import CACHE_DIRNAME, crawl_catalog, load_crawls, store_dir
+from .discovery import (CatalogError, DatasetRef, dataset_name, discover,
+                        is_url)
 from .ranking import (load_catalog_histories, rank_catalog,
                       rank_histories, ranking_markdown)
 from .regression import (regression_markdown, regression_report,
                          report_catalog)
 
 __all__ = [
-    "CatalogError", "DatasetRef", "dataset_name", "discover",
-    "crawl_catalog", "load_crawls", "store_dir",
+    "CatalogError", "DatasetRef", "dataset_name", "discover", "is_url",
+    "crawl_catalog", "load_crawls", "store_dir", "CACHE_DIRNAME",
     "load_catalog_histories", "rank_catalog", "rank_histories",
     "ranking_markdown",
     "regression_report", "report_catalog", "regression_markdown",

@@ -6,6 +6,18 @@ a warm re-crawl rescans only the bytes that actually changed in each
 dataset — the same amortization ``repro.store`` gives a single dataset,
 multiplied across the fleet.
 
+Remote refs (``http(s)://`` distributions, or a manifest URL source) go
+through a **fetch stage** first: a shared ``repro.fetch.Fetcher``
+localizes each distribution into the download cache (default
+``<root>/.fetch-cache``) with retry/backoff, per-host breakers,
+ETag/Last-Modified revalidation, Range resume, and checksum
+verification.  The cache path is stable per URL, so a 304 revalidation
+feeds the *same* local file back into the incremental store — zero
+bytes fetched and zero bytes rescanned on an unchanged re-crawl.  An
+unreachable origin with a cached copy degrades to a **stale** serve
+(``stale: true`` on the dataset record and a summary counter); only a
+never-fetched dataset fails, and the rest of the fleet completes.
+
 Isolation rules mirror ``repro.serve``'s job engine:
 
 * datasets run on a bounded thread pool (``workers``) — the evaluator's
@@ -15,27 +27,40 @@ Isolation rules mirror ``repro.serve``'s job engine:
   transient ones (I/O hiccups) retry with exponential backoff up to
   ``max_attempts``; permanent ones (corrupt content, bad config) fail
   once.  Either way the failure is *recorded* in the summary and the
-  crawl continues — one corrupt dataset never kills the fleet;
+  crawl continues — one corrupt dataset never kills the fleet.  Fetch
+  failures arrive pre-retried (the fetcher owns network backoff) and
+  are recorded without a second retry loop;
 * a ref whose path does not exist is a permanent failure up front (no
   retry: the classifier would call the ``FileNotFoundError`` transient,
   but a missing catalog entry is a configuration error, not a hiccup).
 
 Every crawl appends one summary line to ``<root>/crawls.jsonl`` so the
 regression report can compare "this crawl" against "the previous one"
-even across processes.
+even across processes; ``max_crawls`` bounds that journal by atomically
+rewriting it to the newest N under a cross-process flock (the
+``max_history`` retention rule, applied at the fleet level).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
 
+from ..fetch import Fetcher, FetchError
 from ..serve.jobs import default_transient
-from .discovery import DatasetRef, discover
+from .discovery import DatasetRef, discover, is_url
+
+try:
+    import fcntl
+except ImportError:
+    fcntl = None
 
 CRAWLS_NAME = "crawls.jsonl"
+CACHE_DIRNAME = ".fetch-cache"
 
 
 def store_dir(root: str, name: str) -> str:
@@ -45,16 +70,32 @@ def store_dir(root: str, name: str) -> str:
 
 
 def _assess_one(ref: DatasetRef, root: str, *, metrics, backend, base,
-                segment_bytes: int, max_history: int,
-                max_attempts: int, retry_base: float) -> dict:
+                segment_bytes: int, max_history: int, max_attempts: int,
+                retry_base: float, fetcher: Optional[Fetcher]) -> dict:
     from .. import qa
 
     rec = {"name": ref.name, "path": ref.path, "status": "failed",
            "attempts": 0, "error": None}
     t0 = time.monotonic()
-    if not os.path.isfile(ref.path):
+
+    path = ref.path
+    if ref.remote:
+        rec["url"] = ref.url
+        try:
+            fr = fetcher.fetch(ref.url, checksum=ref.checksum)
+        except FetchError as exc:
+            # the fetcher already retried/backed off network transients;
+            # what escapes is terminal for this crawl
+            rec["attempts"] = max(1, getattr(exc, "attempts", 1))
+            rec["error"] = f"{type(exc).__name__}: {exc}"
+            rec["wall_seconds"] = time.monotonic() - t0
+            return rec
+        rec["fetch"] = fr.to_dict()
+        rec["stale"] = fr.stale
+        rec["path"] = path = fr.path
+    if not os.path.isfile(path):
         rec["attempts"] = 1
-        rec["error"] = f"dataset file not found: {ref.path}"
+        rec["error"] = f"dataset file not found: {path}"
         rec["wall_seconds"] = time.monotonic() - t0
         return rec
 
@@ -70,7 +111,7 @@ def _assess_one(ref: DatasetRef, root: str, *, metrics, backend, base,
     for attempt in range(1, max(1, max_attempts) + 1):
         rec["attempts"] = attempt
         try:
-            result = pipe.run(ref.path)
+            result = pipe.run(path)
         except Exception as exc:            # noqa: BLE001 — recorded
             last_exc = exc
             if attempt < max_attempts and default_transient(exc):
@@ -103,7 +144,12 @@ def crawl_catalog(source, root, *, metrics="all", backend="jnp",
                   base=(), workers: int = 4, segment_bytes: int = 0,
                   max_history: int = 0, max_attempts: int = 3,
                   retry_base: float = 0.2, keep_results: bool = False,
-                  pattern: str = "*.nt") -> dict:
+                  pattern: str = "*.nt", cache_dir=None,
+                  offline: bool = False, refresh: bool = False,
+                  fetch_timeout: float = 10.0,
+                  max_fetch_attempts: int = 3, fetcher: Optional[Fetcher]
+                  = None, fetch_metrics=None,
+                  max_crawls: int = 0) -> dict:
     """Crawl every dataset in ``source`` into per-dataset stores under
     ``root``; returns (and journals) the crawl summary.
 
@@ -113,15 +159,36 @@ def crawl_catalog(source, root, *, metrics="all", backend="jnp",
     ``AssessmentResult`` objects ride along under ``"results"`` (never
     journaled) so callers can compare values *and HLL registers* against
     a standalone ``qa.assess`` — the benchmark's exactness gate.
+
+    Remote sources/distributions go through a shared ``Fetcher`` over
+    ``cache_dir`` (default ``<root>/.fetch-cache``); pass ``fetcher=``
+    to share one cache/breaker/metrics plane across crawls (the daemon
+    does), or ``fetch_metrics=`` to land the fetch counters in an
+    ``obs.Metrics`` registry.  ``offline`` serves only from cache;
+    ``refresh`` forces full re-downloads.
     """
     root = os.fspath(root)
     os.makedirs(root, exist_ok=True)
-    refs = discover(source, pattern=pattern)
+    src = os.fspath(source)
+
+    def make_fetcher() -> Fetcher:
+        return Fetcher(cache_dir or os.path.join(root, CACHE_DIRNAME),
+                       timeout=fetch_timeout,
+                       max_attempts=max_fetch_attempts,
+                       offline=offline, refresh=refresh,
+                       metrics=fetch_metrics)
+
+    if fetcher is None and is_url(src):
+        fetcher = make_fetcher()
+    refs = discover(src, pattern=pattern, fetcher=fetcher)
+    if fetcher is None and any(r.remote for r in refs):
+        fetcher = make_fetcher()
     t0 = time.monotonic()
 
     kw = dict(metrics=metrics, backend=backend, base=tuple(base),
               segment_bytes=segment_bytes, max_history=max_history,
-              max_attempts=max_attempts, retry_base=retry_base)
+              max_attempts=max_attempts, retry_base=retry_base,
+              fetcher=fetcher)
     records: list[dict] = [None] * len(refs)
     if refs:
         with ThreadPoolExecutor(max_workers=max(1, workers)) as pool:
@@ -140,7 +207,7 @@ def crawl_catalog(source, root, *, metrics="all", backend="jnp",
     summary = {
         "generatedAtTime": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                          time.gmtime()),
-        "source": os.fspath(source),
+        "source": src,
         "root": root,
         "n_datasets": len(records),
         "n_ok": len(ok),
@@ -153,7 +220,17 @@ def crawl_catalog(source, root, *, metrics="all", backend="jnp",
         "wall_seconds": time.monotonic() - t0,
         "datasets": records,
     }
-    _append_crawl(root, summary)
+    fetched = [r["fetch"] for r in records if "fetch" in r]
+    if fetched or fetcher is not None:
+        summary["fetch"] = {
+            "requests": len(fetched),
+            "attempts": sum(f["attempts"] for f in fetched),
+            "bytes_fetched": sum(f["bytes_fetched"] for f in fetched),
+            "not_modified": sum(1 for f in fetched if f["not_modified"]),
+            "stale_served": sum(1 for f in fetched if f["stale"]),
+            "offline": offline,
+        }
+    _append_crawl(root, summary, max_crawls=max_crawls)
     if keep_results:
         summary["results"] = results
     return summary
@@ -162,11 +239,45 @@ def crawl_catalog(source, root, *, metrics="all", backend="jnp",
 _crawl_lock = threading.Lock()
 
 
-def _append_crawl(root: str, summary: dict) -> None:
+@contextlib.contextmanager
+def _crawls_flock(root: str):
+    """Cross-process lock for the crawls journal (same flock discipline
+    as the segment store): append+rewrite is atomic fleet-wide."""
+    if fcntl is None:
+        yield
+        return
+    fd = os.open(os.path.join(root, ".crawls.lock"),
+                 os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
+
+
+def _append_crawl(root: str, summary: dict, max_crawls: int = 0) -> None:
     line = json.dumps({k: v for k, v in summary.items()
                        if k != "results"}, sort_keys=True)
-    with _crawl_lock, open(os.path.join(root, CRAWLS_NAME), "a") as f:
-        f.write(line + "\n")
+    path = os.path.join(root, CRAWLS_NAME)
+    with _crawl_lock, _crawls_flock(root):
+        with open(path, "a") as f:
+            f.write(line + "\n")
+        if max_crawls > 0:
+            with open(path) as f:
+                lines = [ln for ln in f.read().splitlines() if ln.strip()]
+            if len(lines) > max_crawls:
+                tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+                try:
+                    with open(tmp, "w") as f:
+                        f.write("\n".join(lines[-max_crawls:]) + "\n")
+                    os.replace(tmp, path)
+                finally:
+                    if os.path.exists(tmp):
+                        try:
+                            os.remove(tmp)
+                        except OSError:
+                            pass
 
 
 def load_crawls(root) -> list[dict]:

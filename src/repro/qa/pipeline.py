@@ -319,7 +319,10 @@ class Pipeline:
                 "iterable of text chunks, not an encoded TripleTensor")
         if self._is_path(dataset):
             def from_file():
-                with open(os.fspath(dataset), "rb") as f:
+                # open_nt sniffs gzip magic: segmentation always runs over
+                # the *decompressed* stream, so a dataset re-published as
+                # .nt.gz reuses every frozen segment of its raw twin
+                with rdf_ingest.open_nt(dataset) as f:
                     yield from seg_store.iter_segments(f, tb)
             return from_file()
         if isinstance(dataset, (str, bytes)):
@@ -328,6 +331,8 @@ class Pipeline:
                     raise FileNotFoundError(
                         f"no such N-Triples file: {dataset!r}")
                 dataset = dataset.encode("utf-8")
+            else:
+                dataset = rdf_ingest.maybe_decompress(dataset)
             return seg_store.iter_segments_bytes(dataset, tb)
         if hasattr(dataset, "__iter__"):
             def from_chunks():
@@ -356,7 +361,7 @@ class Pipeline:
             max_history=self.exec.max_history, **kw)
 
     # -- ingest ----------------------------------------------------------------
-    def _encode(self, text: str) -> TripleTensor:
+    def _encode(self, text) -> TripleTensor:   # str | bytes (gzip ok)
         # vectorized fast path; byte-identical to the legacy
         # parse_ntriples→encode reference (tests/test_ingest.py)
         return rdf_ingest.parse_encode(text, base_namespaces=self.base_ns)
@@ -380,6 +385,8 @@ class Pipeline:
     def _ingest_one(self, item) -> TripleTensor:
         if isinstance(item, TripleTensor):
             return item
+        if isinstance(item, bytes):
+            return self._encode(item)       # parse_encode sniffs gzip
         if isinstance(item, os.PathLike):
             with open(os.fspath(item), "rb") as f:
                 return self._encode(f.read())
@@ -401,6 +408,9 @@ class Pipeline:
             if self._is_path(dataset):
                 return rdf_ingest.stream_chunks(
                     dataset, st, base_namespaces=self.base_ns)
+            if isinstance(dataset, bytes):
+                return rdf_ingest.stream_chunks_text(
+                    dataset, st, base_namespaces=self.base_ns)
             if isinstance(dataset, str):
                 if self._looks_like_ntriples(dataset):
                     return rdf_ingest.stream_chunks_text(
@@ -408,7 +418,7 @@ class Pipeline:
                 raise FileNotFoundError(
                     f"no such N-Triples file: {dataset!r}")
             # pre-chunked iterables fall through to the generic path
-        if isinstance(dataset, (TripleTensor, str, os.PathLike)):
+        if isinstance(dataset, (TripleTensor, str, bytes, os.PathLike)):
             return self._ingest_one(dataset)
         if hasattr(dataset, "__iter__"):
             # generator: one encoded chunk resident at a time

@@ -42,6 +42,7 @@ runs.  This module is the industrialized replacement:
 """
 from __future__ import annotations
 
+import gzip
 import io
 import os
 from typing import BinaryIO, Iterator, Optional, Sequence, Union
@@ -677,13 +678,46 @@ def _encode_block(data: bytes, dictionary: TermDictionary) -> np.ndarray:
 
 # --- public API ---------------------------------------------------------------
 
+GZIP_MAGIC = b"\x1f\x8b"
+
+
+def maybe_decompress(data: bytes) -> bytes:
+    """Transparently gunzip gzipped N-Triples bytes (real LOD dumps ship
+    as ``.nt.gz``; fetched cache files carry no suffix, so detection is
+    by magic bytes, not by name)."""
+    if data[:2] == GZIP_MAGIC:
+        return gzip.decompress(data)
+    return data
+
+
+def open_nt(path: Union[str, os.PathLike]) -> BinaryIO:
+    """Open an N-Triples file for binary streaming, transparently
+    decoding gzip (sniffed by magic bytes) with bounded memory — the
+    returned file object decompresses incrementally, so block-wise
+    consumers (``stream_chunks``, the CDC segmenter) never hold the
+    inflated dataset."""
+    f = open(os.fspath(path), "rb")
+    try:
+        magic = f.read(2)
+        f.seek(0)
+    except OSError:
+        f.close()
+        raise
+    if magic == GZIP_MAGIC:
+        return gzip.GzipFile(fileobj=f)
+    return f
+
+
 def parse_encode(data: Union[str, bytes], base_namespaces: Sequence[str] = (),
                  dictionary: Optional[TermDictionary] = None) -> TripleTensor:
     """Vectorized drop-in for ``encode_ntriples``: N-Triples text/bytes →
     ``TripleTensor``, byte-identical to the legacy parse→encode path
-    (planes, ``n_terms``, and dictionary term keys all match)."""
+    (planes, ``n_terms``, and dictionary term keys all match).  Gzipped
+    bytes are decompressed transparently."""
     if isinstance(data, str):
         data = data.encode("utf-8")
+    else:
+        data = maybe_decompress(data)
     d = dictionary if dictionary is not None else TermDictionary(base_namespaces)
     planes = _encode_block(data, d)
     return TripleTensor(planes, planes.shape[0], len(d))
@@ -708,7 +742,7 @@ def stream_chunks(path: Union[str, os.PathLike],
     single-shot assessment bit-for-bit, HLL sketches included.
     """
     d = dictionary if dictionary is not None else TermDictionary(base_namespaces)
-    with open(os.fspath(path), "rb") as f:
+    with open_nt(path) as f:
         yield from _stream_fileobj(f, chunk_triples, d, block_bytes)
 
 
@@ -719,9 +753,11 @@ def stream_chunks_text(text: Union[str, bytes],
                        block_bytes: Optional[int] = None
                        ) -> Iterator[TripleTensor]:
     """``stream_chunks`` over in-memory N-Triples text (for text datasets
-    fed to a streamed pipeline)."""
+    fed to a streamed pipeline).  Gzipped bytes decompress transparently."""
     if isinstance(text, str):
         text = text.encode("utf-8")
+    else:
+        text = maybe_decompress(text)
     d = dictionary if dictionary is not None else TermDictionary(base_namespaces)
     yield from _stream_fileobj(io.BytesIO(text), chunk_triples, d, block_bytes)
 

@@ -128,6 +128,8 @@ class ServerConfig:
                                       #   (older evicted; journal durable)
     webhook_retries: int = 3          # alert webhook POST attempts
     webhook_backoff: float = 0.5      # webhook backoff base seconds
+    fetch_timeout: float = 10.0       # HTTP timeout for remote sources
+    max_fetch_attempts: int = 3       # HTTP attempts per remote fetch
 
 
 def _now_iso() -> str:
@@ -176,6 +178,8 @@ class QAServer:
         self._started_at = time.time()
         self._stop = threading.Event()
         self._watch_sigs: dict[str, tuple] = {}
+        self._fetcher = None              # built on first remote source
+        self._fetcher_lock = threading.Lock()
         self.httpd = _HTTPServer((host, port), _Handler)
         self.httpd.qa = self
         self.host, self.port = self.httpd.server_address[:2]
@@ -254,12 +258,44 @@ class QAServer:
         for t in self._threads:
             t.join(timeout=10.0)
 
-    # -- the source-file watcher ----------------------------------------------
+    # -- the source watcher ----------------------------------------------------
+    @property
+    def fetcher(self):
+        """Shared fetch plane for ``http(s)://`` dataset sources, built
+        lazily (a daemon with only local sources never creates the cache
+        dir).  One cache + breaker set serves the watcher and every job,
+        and its counters land in this server's /metrics."""
+        with self._fetcher_lock:
+            if self._fetcher is None:
+                from ..fetch import Fetcher
+                self._fetcher = Fetcher(
+                    os.path.join(self.registry.root, ".fetch-cache"),
+                    timeout=self.config.fetch_timeout,
+                    max_attempts=self.config.max_fetch_attempts,
+                    metrics=self.obs)
+            return self._fetcher
+
+    def _source_signature(self, source: str):
+        """Change-detection signature for a registered source: the
+        mtime_ns/size/inode triple for local paths, the cache content
+        digest for remote URLs (a revalidated 304 keeps the digest — and
+        therefore the signature — stable at zero transfer cost)."""
+        from ..catalog import is_url
+        if is_url(source):
+            return ("url", self.fetcher.fetch(source).digest)
+        return file_signature(source)
+
     def _watch_loop(self) -> None:
-        """Poll every registered ``source`` path; enqueue an assessment
-        when its signature changes (``file_signature``: the same
-        mtime_ns/size/inode triple the CLI ``--watch`` loop uses, so
-        same-size atomic replaces are caught here too)."""
+        """Poll every registered ``source``; enqueue an assessment when
+        its signature changes.  Local paths use ``file_signature`` (the
+        same mtime_ns/size/inode triple the CLI ``--watch`` loop uses, so
+        same-size atomic replaces are caught here too); remote URLs
+        revalidate through the fetch cache, so an unchanged origin costs
+        one conditional request and zero body bytes per poll.  A fetch
+        failure (origin down, breaker open with nothing cached) skips
+        the dataset until the next poll — scheduled surfaces degrade,
+        they don't crash."""
+        from ..fetch import FetchError
         while not self._stop.wait(self.config.poll_interval):
             for name in self.registry.names():
                 try:
@@ -269,8 +305,8 @@ class QAServer:
                 if not ds.source:
                     continue
                 try:
-                    sig = file_signature(ds.source)
-                except OSError:
+                    sig = self._source_signature(ds.source)
+                except (OSError, FetchError):
                     continue              # absent/mid-replace: next poll
                 if self._watch_sigs.get(name) == sig:
                     continue
@@ -286,12 +322,23 @@ class QAServer:
         """The dataset bytes this job will assess: the upload for
         upload-triggered jobs, else the registered source, else the last
         upload."""
+        from ..catalog import is_url
+        from ..fetch import FetchError
         ds = self.registry.get(name)
         data = self.registry.data_path(name)
         if trigger == "upload":
             path = data
         else:
             path = ds.source or data
+        if is_url(path):
+            # localize through the shared cache: warm = one conditional
+            # request; origin down = the cached copy, served stale
+            try:
+                return self.fetcher.fetch(path).path
+            except FetchError as e:
+                raise ApiError(
+                    502, f"dataset {name!r}: remote source fetch failed "
+                         f"({e})") from None
         if not os.path.exists(path):
             raise ApiError(409, f"dataset {name!r} has no data: upload to "
                                 f"/datasets/{name}/data or register a "

@@ -403,6 +403,80 @@ class SegmentStore:
         return cls(directory, signature={}).compact(
             max_history=max_history, grace=grace)
 
+    def verify(self) -> dict:
+        """Integrity-check every ``.seg`` file the *disk* manifest
+        references without deserializing any state (no ``np.load`` — the
+        whole walk is digest arithmetic over raw bytes, cheap enough to
+        run before a crawl).
+
+        Two layers per segment, the same ones ``load_state`` trusts: the
+        manifest's whole-file digest, then the self-verifying header's
+        payload digest.  The engine-signature field is deliberately *not*
+        checked — a state frozen by a different engine is unusable, not
+        damaged, and fsck reports damage.  Unreferenced ``.seg`` files
+        are counted as ``orphans`` (possibly a concurrent runner's
+        uncommitted freezes; never an error).
+
+        Returns ``{"segments_checked", "segments_ok", "missing": [fp…],
+        "corrupt": [{"fp", "issue"}…], "orphans", "clean"}``.  Damage is
+        not fatal to the store — a corrupt segment self-heals on the next
+        rescan — but fsck makes it visible *before* the crawl pays for
+        the rescan."""
+        report = {"segments_checked": 0, "segments_ok": 0,
+                  "missing": [], "corrupt": [], "orphans": 0}
+        with self._commit_lock():
+            disk = self._disk_manifest_raw()
+            referenced = disk.get("segments", [])
+            fps = set()
+            for s in referenced:
+                fp = s.get("fp", "?")
+                fps.add(fp)
+                report["segments_checked"] += 1
+                try:
+                    with open(self._state_path(fp), "rb") as f:
+                        data = f.read()
+                except OSError:
+                    report["missing"].append(fp)
+                    continue
+                issue = None
+                if s.get("digest") and _digest(data) != s["digest"]:
+                    issue = "file digest != manifest digest"
+                else:
+                    nl = data.find(b"\n")
+                    parts = data[:nl].split(b" ") if nl >= 0 else []
+                    if (len(parts) != 3 or parts[0] != self._HEADER_MAGIC
+                            or parts[1].decode(errors="replace")
+                            != _digest(data[nl + 1:])):
+                        issue = "self-verifying header digest mismatch"
+                if issue is None:
+                    report["segments_ok"] += 1
+                else:
+                    report["corrupt"].append({"fp": fp, "issue": issue})
+            try:
+                names = os.listdir(self._seg_dir)
+            except OSError:
+                names = []
+            report["orphans"] = sum(
+                1 for n in names
+                if n.endswith(".seg") and n[:-4] not in fps)
+        report["clean"] = not report["missing"] and not report["corrupt"]
+        return report
+
+    @classmethod
+    def verify_dir(cls, directory) -> dict:
+        """``verify()`` without knowing the engine signature (the CLI
+        fsck hook).  A path that never held a store is vacuously clean
+        (``exists: False``) and, like ``compact_dir``, is **not**
+        turned into one."""
+        directory = os.fspath(directory)
+        if not os.path.isdir(os.path.join(directory, "segments")):
+            return {"segments_checked": 0, "segments_ok": 0,
+                    "missing": [], "corrupt": [], "orphans": 0,
+                    "clean": True, "exists": False}
+        report = cls(directory, signature={}).verify()
+        report["exists"] = True
+        return report
+
     def _gc(self, live: set) -> None:
         """Remove state files not referenced by the manifest just written
         — except *fresh* ones (younger than ``GC_GRACE_SECONDS``), which

@@ -294,3 +294,40 @@ def test_serve_catalog_ranking_endpoint(tmp_path):
         assert raw.decode().startswith("# Catalog quality ranking")
     finally:
         srv.close()
+
+
+def test_qa_catalog_cli_fsck(tmp_path, capsys):
+    from repro.launch import qa_catalog
+    src = make_catalog(tmp_path / "cat", {"fa": 40, "fb": 25})
+    root = os.fspath(tmp_path / "root")
+    assert qa_catalog.main(["crawl", "--source", src, "--root", root,
+                            "--segment-bytes", str(SEG),
+                            "--base", BASE[0]]) == 0
+    capsys.readouterr()
+
+    assert qa_catalog.main(["fsck", "--root", root]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_datasets"] == 2 and doc["n_damaged"] == 0
+    assert all(d["clean"] for d in doc["datasets"].values())
+
+    # corrupt one frozen segment of one store: fsck exits 1, names it
+    segdir = os.path.join(catalog.store_dir(root, "fa"), "segments")
+    victim = sorted(f for f in os.listdir(segdir) if f.endswith(".seg"))[0]
+    with open(os.path.join(segdir, victim), "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        last = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([last[0] ^ 0xFF]))
+    assert qa_catalog.main(["fsck", "--root", root]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_damaged"] == 1
+    assert not doc["datasets"]["fa"]["clean"]
+    assert doc["datasets"]["fb"]["clean"]
+
+    # the damaged store self-heals on the next crawl
+    assert qa_catalog.main(["crawl", "--source", src, "--root", root,
+                            "--segment-bytes", str(SEG),
+                            "--base", BASE[0]]) == 0
+    capsys.readouterr()
+    assert qa_catalog.main(["fsck", "--root", root]) == 0
+    capsys.readouterr()

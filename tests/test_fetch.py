@@ -1,0 +1,495 @@
+"""``repro.fetch`` — the resilient HTTP fetch/cache plane, chaos-first.
+
+The contract under test, driven through the flaky in-process origin: a
+transient 503 burst is retried and surfaced in ``attempts``; an
+unchanged resource revalidates with a 304 (zero body bytes, and —
+through the crawl — zero bytes rescanned); a download torn mid-body is
+completed with a Range request; a manifest checksum mismatch is a
+*permanent* failure; an unreachable origin with a cached copy is served
+stale while the rest of the fleet completes; offline mode never touches
+the network.  The acceptance crawl at the bottom runs the whole story
+end to end against a remote DCAT catalog and checks values AND HLL
+registers against standalone local assessments.
+"""
+import gzip
+import hashlib
+import json
+import os
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import catalog, qa
+from repro.catalog import CatalogError, DatasetRef
+from repro.fetch import (ChecksumMismatch, Fetcher, FetchCache,
+                         FlakyOriginServer, HostQuarantined,
+                         HttpFaultInjector, PermanentFetchError,
+                         TransientFetchError)
+from repro.rdf import bsbm_ntriples
+from repro.serve.jobs import default_transient
+from repro.serve.obs import Metrics
+
+BASE = ("http://bsbm.example.org/",)
+SEG = 4096
+
+
+@pytest.fixture()
+def origin(tmp_path):
+    root = tmp_path / "origin"
+    root.mkdir()
+    inj = HttpFaultInjector()
+    with FlakyOriginServer(root, inj) as srv:
+        yield srv
+
+
+def put_file(origin, name, data):
+    if isinstance(data, str):
+        data = data.encode()
+    path = os.path.join(origin.root, name)
+    with open(path, "wb") as f:
+        f.write(data)
+    return data
+
+
+def fetcher(tmp_path, **kw):
+    kw.setdefault("retry_base", 0.01)
+    return Fetcher(tmp_path / "cache", **kw)
+
+
+# -- cache ---------------------------------------------------------------------
+
+def test_cache_roundtrip_and_torn_entry(tmp_path):
+    cache = FetchCache(tmp_path / "c")
+    url = "http://example.org/x.nt"
+    meta = cache.store(url, b"abc", etag='"e1"')
+    assert cache.load(url)["etag"] == '"e1"'
+    assert open(cache.data_path(url), "rb").read() == b"abc"
+    assert cache.verify(url)
+    # data file torn (size mismatch with meta) -> entry treated absent
+    with open(cache.data_path(url), "wb") as f:
+        f.write(b"a")
+    assert cache.load(url) is None
+    # restore + flip a byte: size check passes, full verify does not
+    with open(cache.data_path(url), "wb") as f:
+        f.write(b"abd")
+    assert cache.load(url)["digest"] == meta["digest"]
+    assert not cache.verify(url)
+
+
+def test_cache_key_is_stable_per_url(tmp_path):
+    c1 = FetchCache(tmp_path / "c")
+    assert c1.data_path("http://a/x") == c1.data_path("http://a/x")
+    assert c1.data_path("http://a/x") != c1.data_path("http://a/y")
+
+
+# -- retry / revalidation / resume ---------------------------------------------
+
+def test_transient_503_then_success_attempts_surfaced(origin, tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(30, seed=1))
+    origin.faults.fail_requests["/d.nt"] = 2
+    m = Metrics()
+    fe = fetcher(tmp_path, metrics=m, max_attempts=4)
+    r = fe.fetch(origin.url_for("d.nt"))
+    assert r.status == "fetched" and r.attempts == 3
+    assert open(r.path, "rb").read() == data
+    assert m.value("repro_fetch_attempts_total") == 3
+    codes = [s for _, _, s in origin.request_log("/d.nt")]
+    assert codes == [503, 503, 200]
+
+
+def test_retry_exhaustion_without_cache_is_transient_error(origin,
+                                                           tmp_path):
+    put_file(origin, "d.nt", "x")
+    origin.faults.fail_requests["/d.nt"] = 99
+    fe = fetcher(tmp_path, max_attempts=2)
+    with pytest.raises(TransientFetchError) as ei:
+        fe.fetch(origin.url_for("d.nt"))
+    assert ei.value.attempts == 2
+    # the taxonomy plugs into the job layer's classifier: retryable,
+    # while a permanent fetch failure (e.g. 404) is not
+    assert default_transient(ei.value)
+    with pytest.raises(PermanentFetchError) as pi:
+        fe.fetch(origin.url_for("missing.nt"))
+    assert not default_transient(pi.value)
+
+
+def test_retry_after_floors_the_backoff(origin, tmp_path):
+    put_file(origin, "d.nt", "x")
+    origin.faults.fail_requests["/d.nt"] = 1
+    origin.faults.retry_after = 7.5
+    sleeps = []
+    fe = fetcher(tmp_path, sleep=sleeps.append)
+    fe.fetch(origin.url_for("d.nt"))
+    assert sleeps and sleeps[0] >= 7.5
+
+
+def test_etag_revalidation_zero_bytes(origin, tmp_path):
+    put_file(origin, "d.nt", bsbm_ntriples(30, seed=2))
+    m = Metrics()
+    fe = fetcher(tmp_path, metrics=m)
+    url = origin.url_for("d.nt")
+    first = fe.fetch(url)
+    again = fe.fetch(url)
+    assert again.status == "revalidated" and again.not_modified
+    assert again.bytes_fetched == 0
+    assert again.path == first.path            # stable local path
+    assert m.value("repro_fetch_not_modified_total") == 1
+    assert origin.request_log("/d.nt")[-1][2] == 304
+
+
+def test_wrong_etag_origin_degrades_to_full_refetch(origin, tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(30, seed=3))
+    origin.faults.wrong_etag.add("/d.nt")
+    fe = fetcher(tmp_path)
+    url = origin.url_for("d.nt")
+    fe.fetch(url)
+    r = fe.fetch(url)        # ETag never matches -> 200, not 304
+    assert r.status == "fetched" and r.bytes_fetched == len(data)
+    assert open(r.path, "rb").read() == data
+
+
+def test_torn_download_resumed_via_range(origin, tmp_path):
+    data = put_file(origin, "big.nt", b"y" * 200_000)
+    origin.faults.truncate_bodies["/big.nt"] = 1
+    m = Metrics()
+    fe = fetcher(tmp_path, metrics=m)
+    r = fe.fetch(origin.url_for("big.nt"))
+    assert r.status == "fetched" and r.resumed and r.attempts == 2
+    assert open(r.path, "rb").read() == data
+    codes = [s for _, _, s in origin.request_log("/big.nt")]
+    assert codes == [200, 206]
+    assert m.value("repro_fetch_resumed_total") == 1
+
+
+def test_dropped_connection_is_retried(origin, tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(20, seed=4))
+    origin.faults.drop_connections["/d.nt"] = 1
+    fe = fetcher(tmp_path)
+    r = fe.fetch(origin.url_for("d.nt"))
+    assert r.status == "fetched" and r.attempts == 2
+    assert open(r.path, "rb").read() == data
+
+
+def test_checksum_mismatch_is_permanent_and_preserves_cache(origin,
+                                                            tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(20, seed=5))
+    want = ("sha256", hashlib.sha256(data).hexdigest())
+    m = Metrics()
+    fe = fetcher(tmp_path, metrics=m)
+    url = origin.url_for("d.nt")
+    good = fe.fetch(url, checksum=want)
+    assert good.status == "fetched"
+    # origin starts corrupting; the declared checksum catches it and the
+    # previously-committed good bytes survive
+    origin.faults.corrupt_bodies["/d.nt"] = 9
+    fe2 = fetcher(tmp_path, refresh=True, metrics=m)
+    with pytest.raises(ChecksumMismatch):
+        fe2.fetch(url, checksum=want)
+    assert m.value("repro_fetch_checksum_failures_total") == 1
+    assert open(fe.cache.data_path(url), "rb").read() == data
+
+
+def test_origin_down_serves_stale_from_cache(origin, tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(20, seed=6))
+    m = Metrics()
+    fe = fetcher(tmp_path, metrics=m, max_attempts=2)
+    url = origin.url_for("d.nt")
+    fe.fetch(url)
+    origin.faults.down.add("*")
+    r = fe.fetch(url)
+    assert r.status == "stale" and r.stale and r.error
+    assert open(r.path, "rb").read() == data
+    host = origin.url.split("//")[1]
+    assert m.value("repro_fetch_stale_served_total", host=host) == 1
+    origin.faults.down.discard("*")
+    assert fe.fetch(url).status in ("fetched", "revalidated")
+
+
+def test_offline_mode_never_touches_network(origin, tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(20, seed=7))
+    url = origin.url_for("d.nt")
+    fetcher(tmp_path).fetch(url)
+    n = len(origin.request_log())
+    off = fetcher(tmp_path, offline=True)
+    r = off.fetch(url)
+    assert r.status == "offline" and r.attempts == 0
+    assert open(r.path, "rb").read() == data
+    with pytest.raises(PermanentFetchError, match="offline"):
+        off.fetch(origin.url + "/never.nt")
+    assert len(origin.request_log()) == n
+
+
+def test_host_breaker_opens_and_fails_fast(origin, tmp_path):
+    put_file(origin, "a.nt", "x")
+    origin.faults.down.add("*")
+    fe = fetcher(tmp_path, max_attempts=1, breaker_threshold=2,
+                 breaker_cooldown=60.0)
+    for i in range(2):
+        with pytest.raises(TransientFetchError):
+            fe.fetch(origin.url + f"/u{i}.nt")
+    assert fe.breaker_state(origin.url)["state"] == "open"
+    n = len(origin.request_log())
+    with pytest.raises(HostQuarantined):
+        fe.fetch(origin.url + "/u3.nt")
+    assert len(origin.request_log()) == n      # failed fast, no attempt
+
+
+def test_concurrent_fetches_share_one_cache_entry(origin, tmp_path):
+    data = put_file(origin, "d.nt", bsbm_ntriples(40, seed=8))
+    fe = fetcher(tmp_path)
+    url = origin.url_for("d.nt")
+    results = [None] * 8
+    def go(i):
+        results[i] = fe.fetch(url)
+    ts = [threading.Thread(target=go, args=(i,)) for i in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert all(r is not None for r in results)
+    paths = {r.path for r in results}
+    assert len(paths) == 1
+    assert open(paths.pop(), "rb").read() == data
+
+
+# -- remote discovery ----------------------------------------------------------
+
+def test_discover_remote_manifest_with_relative_urls(origin, tmp_path):
+    os.makedirs(os.path.join(origin.root, "data"), exist_ok=True)
+    put_file(origin, "data/d0.nt", "x")
+    doc = {"dataset": [
+        {"title": "First Set",
+         "distribution": [{
+             "downloadURL": "data/d0.nt",
+             "checksum": {"algorithm":
+                          "http://spdx.org/rdf/terms#checksumAlgorithm_"
+                          "sha256",
+                          "checksumValue": "AB" * 32}}]},
+        {"title": "elsewhere",
+         "distribution": [{"downloadURL":
+                           "http://other.example/e.nt"}]},
+    ]}
+    put_file(origin, "cat.json", json.dumps(doc))
+    refs = catalog.discover(origin.url_for("cat.json"),
+                            fetcher=fetcher(tmp_path))
+    assert refs[0].name == "First_Set"
+    assert refs[0].url == origin.url + "/data/d0.nt"   # urljoin'd
+    assert refs[0].checksum == ("sha256", "ab" * 32)   # spdx algo parsed
+    assert refs[1].url == "http://other.example/e.nt"
+    assert all(r.remote and r.path == "" for r in refs)
+
+
+def test_discover_remote_manifest_requires_fetcher():
+    with pytest.raises(CatalogError, match="fetcher"):
+        catalog.discover("http://example.org/cat.json")
+
+
+def test_local_manifest_with_http_distribution_is_remote(tmp_path):
+    man = tmp_path / "m.json"
+    man.write_text(json.dumps({"remote set":
+                               "https://example.org/dump.nt.gz"}))
+    refs = catalog.discover(man)
+    assert refs == [DatasetRef("remote_set", "",
+                               url="https://example.org/dump.nt.gz")]
+    # .nt.gz names sanitize the same as .nt (one dataset, two encodings)
+    assert refs[0].name == catalog.dataset_name("remote set")
+
+
+# -- crawl integration ---------------------------------------------------------
+
+def crawl(src, root, **kw):
+    kw.setdefault("base", BASE)
+    kw.setdefault("segment_bytes", SEG)
+    kw.setdefault("workers", 2)
+    kw.setdefault("max_fetch_attempts", 4)
+    return catalog.crawl_catalog(src, root, **kw)
+
+
+def remote_catalog(origin, specs):
+    """Write datasets + a DCAT manifest on the origin; returns
+    ``(manifest_url, {name: text})``."""
+    texts = {}
+    entries = []
+    for i, (name, n) in enumerate(sorted(specs.items())):
+        texts[name] = bsbm_ntriples(n, seed=20 + i)
+        put_file(origin, f"{name}.nt", texts[name])
+        entries.append({"title": name,
+                        "distribution": [{"downloadURL": f"{name}.nt"}]})
+    put_file(origin, "catalog.json", json.dumps({"dataset": entries}))
+    return origin.url_for("catalog.json"), texts
+
+
+def test_acceptance_flaky_remote_crawl_exact_and_stale(origin, tmp_path):
+    """The ISSUE's acceptance scenario: injected 503s, one torn
+    download, one unreachable-but-cached origin path — every reachable
+    dataset exact vs standalone qa.assess, the unreachable one served
+    stale and flagged, and an unchanged re-crawl all-304 with 0 bytes
+    rescanned."""
+    url, texts = remote_catalog(origin, {"pa": 45, "qb": 35, "rc": 25})
+    root = tmp_path / "root"
+
+    # warm the cache for rc (it will go unreachable), then inject chaos
+    seed_crawl = crawl(url, root)
+    assert seed_crawl["n_failed"] == 0
+    origin.faults.fail_requests["/pa.nt"] = 2        # transient 503s
+    origin.faults.truncate_bodies["/qb.nt"] = 1      # torn mid-body
+    origin.faults.down.add("/rc.nt")                 # unreachable
+    put_file(origin, "pa.nt", texts["pa"] + bsbm_ntriples(4, seed=91))
+    put_file(origin, "qb.nt", texts["qb"] + bsbm_ntriples(4, seed=92))
+    texts["pa"] += bsbm_ntriples(4, seed=91)
+    texts["qb"] += bsbm_ntriples(4, seed=92)
+
+    chaos = crawl(url, root, keep_results=True)
+    assert chaos["n_failed"] == 0, chaos["datasets"]
+    per = {d["name"]: d for d in chaos["datasets"]}
+    assert per["pa"]["fetch"]["attempts"] == 3
+    assert per["qb"]["fetch"]["resumed"]
+    assert per["rc"]["stale"] and per["rc"]["fetch"]["status"] == "stale"
+    assert chaos["fetch"]["stale_served"] == 1
+    # every dataset exact vs a standalone local assessment — the stale
+    # one against its cached (previous) bytes
+    for name, want_text in texts.items():
+        want = qa.pipeline().metrics("all").base(*BASE).run(want_text)
+        got = chaos["results"][name]
+        assert got.values == want.values, name
+        for k in want.registers:
+            np.testing.assert_array_equal(got.registers[k],
+                                          want.registers[k])
+
+    # unchanged re-crawl: every distribution revalidates, nothing rescans
+    origin.faults.down.discard("/rc.nt")
+    crawl(url, root)                      # rc catches up post-outage
+    warm = crawl(url, root)
+    assert warm["n_failed"] == 0
+    assert warm["fetch"]["not_modified"] == 3
+    assert warm["fetch"]["bytes_fetched"] == 0
+    assert warm["bytes_rescanned"] == 0
+
+
+def test_crawl_offline_serves_cache_and_fails_uncached(origin, tmp_path):
+    url, texts = remote_catalog(origin, {"oa": 30, "ob": 20})
+    root = tmp_path / "root"
+    crawl(url, root)
+    n = len(origin.request_log())
+    off = crawl(url, root, offline=True)
+    assert off["n_failed"] == 0
+    assert len(origin.request_log()) == n     # zero network traffic
+    assert off["fetch"]["bytes_fetched"] == 0
+    # a never-fetched distribution is the only thing that fails offline
+    put_file(origin, "new.nt", bsbm_ntriples(10, seed=50))
+    entries = [{"title": t, "distribution":
+                [{"downloadURL": f"{t}.nt"}]}
+               for t in ("oa", "ob", "new")]
+    put_file(origin, "catalog.json", json.dumps({"dataset": entries}))
+    crawl(url, root)                          # refresh manifest + new.nt
+    origin.faults.down.add("*")
+    off2 = crawl(url, root, offline=True)
+    assert off2["n_failed"] == 0              # all cached now
+
+
+def test_crawl_checksum_mismatch_fails_that_dataset_only(origin,
+                                                         tmp_path):
+    texts = {n: bsbm_ntriples(25, seed=60 + i)
+             for i, n in enumerate(("ca", "cb"))}
+    for n, t in texts.items():
+        put_file(origin, f"{n}.nt", t)
+    entries = []
+    for n, t in texts.items():
+        good = hashlib.sha256(t.encode()).hexdigest()
+        entries.append({"title": n, "distribution": [
+            {"downloadURL": f"{n}.nt",
+             "checksum": {"algorithm": "sha256",
+                          "checksumValue": good if n == "ca"
+                          else "00" * 32}}]})
+    put_file(origin, "catalog.json", json.dumps({"dataset": entries}))
+    summary = crawl(origin.url_for("catalog.json"), tmp_path / "root")
+    per = {d["name"]: d for d in summary["datasets"]}
+    assert per["ca"]["status"] == "ok"
+    assert per["cb"]["status"] == "failed"
+    assert "ChecksumMismatch" in per["cb"]["error"]
+    assert summary["n_failed"] == 1
+
+
+def test_crawl_gzip_distribution_matches_plain(origin, tmp_path):
+    text = bsbm_ntriples(40, seed=70)
+    put_file(origin, "g.nt.gz", gzip.compress(text.encode()))
+    put_file(origin, "catalog.json",
+             json.dumps({"gz set": "g.nt.gz"}))
+    summary = crawl(origin.url_for("catalog.json"), tmp_path / "root",
+                    keep_results=True)
+    assert summary["n_failed"] == 0
+    want = qa.pipeline().metrics("all").base(*BASE).run(text)
+    got = summary["results"]["gz_set"]
+    assert got.values == want.values
+    for k in want.registers:
+        np.testing.assert_array_equal(got.registers[k],
+                                      want.registers[k])
+
+
+def test_crawls_journal_max_crawls_retention(tmp_path):
+    src = tmp_path / "cat"
+    src.mkdir()
+    (src / "d.nt").write_text(bsbm_ntriples(10, seed=80))
+    root = tmp_path / "root"
+    for _ in range(5):
+        crawl(src, root, max_crawls=3)
+    crawls = catalog.load_crawls(root)
+    assert len(crawls) == 3
+    # unbounded when 0 (the default): the next crawl just appends
+    crawl(src, root)
+    assert len(catalog.load_crawls(root)) == 4
+
+
+# -- daemon: remote sources ----------------------------------------------------
+
+def test_daemon_watches_remote_source(origin, tmp_path):
+    from repro.serve import QAServer, ServerConfig
+
+    text = bsbm_ntriples(30, seed=85)
+    put_file(origin, "w.nt", text)
+    srv = QAServer(ServerConfig(
+        store_root=os.fspath(tmp_path / "root"), metrics="paper",
+        base=BASE, workers=1, segment_bytes=SEG,
+        poll_interval=0.1), port=0).start()
+    try:
+        body = json.dumps({"source": origin.url_for("w.nt")}).encode()
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{srv.port}/datasets/rds", data=body,
+            method="PUT")
+        with urllib.request.urlopen(req, timeout=30) as resp:
+            assert resp.status == 201
+
+        def n_done():
+            return sum(1 for j in srv.jobs.list("rds")
+                       if j["state"] == "done"
+                       and j["trigger"] == "watch")
+
+        deadline = time.time() + 60
+        while n_done() < 1:
+            assert time.time() < deadline, "watcher never fetched source"
+            time.sleep(0.05)
+        # edit the origin file: the revalidation digest changes and the
+        # watcher queues a re-assessment of the new bytes
+        put_file(origin, "w.nt", text + bsbm_ntriples(5, seed=86))
+        while n_done() < 2:
+            assert time.time() < deadline, "watcher missed remote edit"
+            time.sleep(0.05)
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/datasets/rds/report",
+                timeout=30) as resp:
+            rep = json.load(resp)
+        want = qa.assess(text + bsbm_ntriples(5, seed=86),
+                         metrics="paper", base=BASE)
+        assert rep["nTriples"] == want.n_triples
+        # fetch counters surface in this server's Prometheus text
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/metrics",
+                timeout=30) as resp:
+            prom = resp.read().decode()
+        assert "repro_fetch_requests_total" in prom
+        assert "repro_fetch_not_modified_total" in prom
+    finally:
+        srv.close()
